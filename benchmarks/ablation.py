@@ -1,0 +1,34 @@
+"""Fig. 14: ablation — remove request routing, SLO-adaptive speculative
+decoding, and burst-resilient (best-effort) scheduling one at a time; the
+baseline case is a prefill-oriented scheduler inside our own system."""
+from __future__ import annotations
+
+from benchmarks.common import emit, system_factory, timed
+from repro.core.simulator import find_capacity
+
+VARIANTS = [
+    ("full", "ours", 4),             # routing + spec + BE
+    ("-routing", "ours", 1),         # single replica
+    ("-spec", "ours-ar", 1),         # autoregressive only
+    ("-burst_resilient", "ours-nobe", 1),
+    ("baseline_prefill_oriented", "vllm", 1),
+]
+
+
+def run(scenario: str = "coder", duration=30.0, iters=5):
+    caps = {}
+    for name, sysname, reps in VARIANTS:
+        cap, dt = timed(find_capacity,
+                        system_factory(sysname, n_replicas=reps), scenario,
+                        duration=duration, iters=iters, n_chips=reps)
+        caps[name] = cap
+        emit(f"ablation_{scenario}_{name}", dt * 1e6,
+             f"req/s/chip={cap:.2f}")
+    for name in ("-routing", "-spec", "-burst_resilient"):
+        if caps.get(name):
+            emit(f"ablation_{scenario}_gain_{name}", 0.0,
+                 f"x={caps['full'] / caps[name]:.2f}")
+
+
+if __name__ == "__main__":
+    run()

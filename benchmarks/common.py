@@ -1,0 +1,47 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+from repro.core.perf_model import A100_40G, opt_perf_model
+from repro.core.router import make_baseline_cluster, make_slos_serve_cluster
+from repro.core.simulator import find_capacity
+from repro.core.workload import SCENARIOS, generate_workload
+
+PERF = opt_perf_model(7e9)
+PERF_SPEC = opt_perf_model(7e9, spec=True)
+
+
+def system_factory(kind: str, n_replicas: int = 1, spec_alpha=0.7):
+    if kind == "ours":
+        return lambda: make_slos_serve_cluster(
+            n_replicas, PERF_SPEC if spec_alpha else PERF,
+            spec_alpha=spec_alpha)
+    if kind == "ours-ar":
+        return lambda: make_slos_serve_cluster(n_replicas, PERF,
+                                               spec_alpha=None)
+    if kind == "ours-nobe":
+        import dataclasses
+        from repro.core.simulator import SimConfig
+        return lambda: make_slos_serve_cluster(
+            n_replicas, PERF, spec_alpha=None,
+            sim_cfg=SimConfig(best_effort=False))
+    if kind == "distserve":
+        def best_of_ratios():
+            return make_baseline_cluster("distserve", max(n_replicas, 2),
+                                         PERF, prefill_ratio=(1, 1))
+        return best_of_ratios
+    return lambda: make_baseline_cluster(kind, n_replicas, PERF)
+
+
+SYSTEMS = ["ours", "ours-ar", "vllm", "vllm-spec", "sarathi"]
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, time.time() - t0
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -1,0 +1,22 @@
+"""Fig. 15: scheduling overhead per planning call (target: <10 ms,
+majority <2 ms — paper §6.4)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, system_factory
+from repro.core.workload import generate_workload
+
+
+def run(rate: float = 6.0, duration: float = 30.0):
+    sim = system_factory("ours-ar")()
+    res = sim.run(generate_workload("chatbot", rate, duration, seed=0))
+    oh = np.array(res.sched_overheads)
+    emit("sched_overhead_median", float(np.median(oh) * 1e6),
+         f"p99_ms={np.percentile(oh, 99) * 1e3:.2f};"
+         f"max_ms={oh.max() * 1e3:.2f};n={len(oh)};"
+         f"frac_under_2ms={float((oh < 0.002).mean()):.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Roofline summary (deliverable g): read dry-run records and emit the
+per-(arch x shape x mesh) terms as benchmark CSV lines."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.launch.roofline import analyze
+
+
+def run(dirpath: str = "experiments/dryrun"):
+    files = sorted(glob.glob(os.path.join(dirpath, "*.json")))
+    if not files:
+        emit("roofline_table", 0.0,
+             "no dry-run records; run python -m repro.launch.dryrun --all")
+        return
+    n_ok = n_skip = n_err = 0
+    for path in files:
+        rec = json.load(open(path))
+        tag = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+        if rec.get("status") == "ok":
+            r = analyze(rec)
+            n_ok += 1
+            emit(f"roofline_{tag}", r["t_compute_s"] * 1e6,
+                 f"dom={r['dominant']};mem_s={r['t_memory_s']:.2e};"
+                 f"coll_s={r['t_collective_s']:.2e};"
+                 f"useful={r['useful_ratio']:.2f}")
+        elif rec.get("status") == "skipped":
+            n_skip += 1
+        else:
+            n_err += 1
+            emit(f"roofline_{tag}", 0.0, f"ERROR:{rec.get('error', '')[:80]}")
+    emit("roofline_summary", 0.0,
+         f"ok={n_ok};skipped={n_skip};errors={n_err}")
+
+
+if __name__ == "__main__":
+    run()

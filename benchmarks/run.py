@@ -1,0 +1,62 @@
+"""Benchmark harness — one runner per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Default settings finish in
+a few minutes on one CPU; pass --full for paper-scale sweeps.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only capacity,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (ablation, burst, capacity, fidelity, overhead,
+                            roofline_table, scaling, throughput_latency)
+
+    full = args.full
+    benches = {
+        "throughput_latency": lambda: throughput_latency.run(),
+        "fidelity": lambda: fidelity.run(),
+        "overhead": lambda: overhead.run(),
+        "burst": lambda: burst.run(),
+        "capacity": lambda: capacity.run(
+            scenarios=(("chatbot", "coder", "summarizer", "mixed",
+                        "toolllm", "reasoning") if full
+                       else ("chatbot", "coder", "summarizer")),
+            duration=45.0 if full else 25.0,
+            iters=8 if full else 4),
+        "scaling": lambda: scaling.run(
+            replicas=(1, 2, 4), duration=30.0 if full else 20.0,
+            iters=5 if full else 4),
+        "ablation": lambda: ablation.run(
+            duration=30.0 if full else 20.0, iters=5 if full else 4),
+        "capacity_strict": lambda: (capacity.run_strict()
+                                    if full else None),
+        "roofline_table": lambda: roofline_table.run(),
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}_FAILED,0,{type(e).__name__}:{e}",
+                  file=sys.stderr)
+            raise
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

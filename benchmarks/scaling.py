@@ -1,0 +1,24 @@
+"""Fig. 13: multi-replica capacity scaling with SLO-driven routing."""
+from __future__ import annotations
+
+from benchmarks.common import emit, system_factory, timed
+from repro.core.simulator import find_capacity
+
+
+def run(scenarios=("chatbot", "coder"), replicas=(1, 2, 4),
+        duration=30.0, iters=5):
+    for sc in scenarios:
+        base = None
+        for n in replicas:
+            cap, dt = timed(
+                find_capacity, system_factory("ours-ar", n_replicas=n), sc,
+                duration=duration, iters=iters, n_chips=n)
+            total = cap * n
+            if base is None:
+                base = total if total > 0 else 1e-9
+            emit(f"scaling_{sc}_{n}rep", dt * 1e6,
+                 f"total_req/s={total:.2f};speedup={total / base:.2f}")
+
+
+if __name__ == "__main__":
+    run()

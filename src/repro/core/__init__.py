@@ -1,0 +1,17 @@
+"""SLOs-Serve core: multi-SLO planning, admission control, routing, simulation."""
+from repro.core.batch import Batch, BatchEntry
+from repro.core.perf_model import (PerfModel, HardwareSpec, TPU_V5E, A100_40G,
+                                   H100_80G, opt_perf_model)
+from repro.core.request import Request, RequestState, simple_request
+from repro.core.scheduler import SLOsServeScheduler, SchedulerConfig, PlanResult
+from repro.core.simulator import ClusterSim, SimConfig, find_capacity
+from repro.core.slo import (StageKind, StageSLO, StageSpec, prefill_slo,
+                            decode_slo)
+
+__all__ = [
+    "Batch", "BatchEntry", "PerfModel", "HardwareSpec", "TPU_V5E", "A100_40G",
+    "H100_80G", "opt_perf_model", "Request", "RequestState", "simple_request",
+    "SLOsServeScheduler", "SchedulerConfig", "PlanResult", "ClusterSim",
+    "SimConfig", "find_capacity", "StageKind", "StageSLO", "StageSpec",
+    "prefill_slo", "decode_slo",
+]

@@ -1,0 +1,87 @@
+"""SLO-adaptive speculative decoding planner (paper §3.2.3, Appendix D).
+
+Chooses per-TPOT-tier speculation lengths sl_{1:L} that maximize the prefill
+token *throughput* left over after satisfying all decode SLOs:
+
+    max_{sl}  prefillTpt = PrefillBgtPerBatch / BatchTime
+    PrefillBgtPerBatch   = Time2BS(T(sl), sl) - sum_l n_l * sl_l
+    BatchTime T(sl)      = min_l ( TPOT_l * Acc(sl_l) )
+
+where Acc(sl) = (1 - alpha^(sl+1)) / (1 - alpha) is the expected number of
+tokens emitted per verification step with acceptance rate alpha (Leviathan et
+al.; the verified prefix plus the bonus token).
+
+The search space is tiny (sl <= MAX_SPEC_LEN, L <= 3 tiers in practice), so we
+enumerate exhaustively instead of using the paper's closed-form shortcut —
+same optimum, simpler code, covered by tests against the closed form.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Optional, Sequence
+
+from repro.core.perf_model import PerfModel
+
+MAX_SPEC_LEN = 8   # paper App. D: "maximum speculation decode lengths below 10"
+
+
+def acc_len(sl: int, alpha: float) -> float:
+    """Expected tokens emitted per verify of ``sl`` drafted tokens."""
+    if sl <= 0:
+        return 1.0
+    if alpha >= 1.0 - 1e-9:
+        return float(sl + 1)
+    return (1.0 - alpha ** (sl + 1)) / (1.0 - alpha)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecPlan:
+    spec_lens: tuple[int, ...]       # drafted tokens per tier
+    batch_time: float                # T(sl)
+    prefill_budget_per_batch: float
+    prefill_tpt: float
+
+    @property
+    def spec_step(self) -> int:
+        return max(self.spec_lens) if self.spec_lens else 0
+
+
+def plan_speculation(tier_counts: Sequence[int], tiers: Sequence[float],
+                     perf: PerfModel, alpha: float,
+                     max_sl: int = MAX_SPEC_LEN) -> Optional[SpecPlan]:
+    """Optimal per-tier speculation lengths; None if no feasible plan."""
+    assert len(tier_counts) == len(tiers)
+    L = len(tiers)
+    active = [l for l in range(L) if tier_counts[l] > 0]
+    if not active:
+        return SpecPlan(tuple([0] * L), 0.0, 0.0, math.inf)
+
+    best: Optional[SpecPlan] = None
+    choices = [range(0, max_sl + 1) if l in active else (0,)
+               for l in range(L)]
+    for sls in itertools.product(*choices):
+        # Effective batch latency target: every tier-l request receives
+        # Acc(sl_l) tokens per batch, so the batch must finish within
+        # TPOT_l * Acc(sl_l); the binding tier is the min.
+        T = min(tiers[l] * acc_len(sls[l], alpha) for l in active)
+        spec_step = max(sls[l] for l in active)
+        cap = perf.time2bs(T, spec_step=spec_step)
+        decode_toks = sum(tier_counts[l] * (sls[l] + 1) for l in active)
+        pb = cap - decode_toks
+        if pb < 0:
+            continue
+        tpt = pb / T if T > 0 else 0.0
+        if best is None or tpt > best.prefill_tpt:
+            best = SpecPlan(tuple(int(s) for s in sls), T, float(pb), tpt)
+    return best
+
+
+def strengthen_slo(tpot: float, tokens_behind: int, window: int = 10) -> float:
+    """Dynamic SLO adjustment under speculation uncertainty (§3.2.3):
+    a request that fell ``tokens_behind`` tokens behind its SLO gets a
+    proportionally tightened TPOT for the next planning window."""
+    if tokens_behind <= 0:
+        return tpot
+    return tpot * window / (window + tokens_behind)

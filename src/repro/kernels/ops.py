@@ -1,0 +1,72 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle GQA expansion, padding to tile multiples, layout moves, and the
+interpret-mode switch (CPU containers execute the kernel bodies in Python;
+on TPU the same calls compile to Mosaic).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_bh
+from repro.kernels.paged_attention import paged_decode_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x, axis: int, mult: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+@partial(jax.jit, static_argnames=("causal", "q_offset", "kv_len",
+                                   "block_q", "block_k", "interpret"))
+def attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+              kv_len: int = None, block_q: int = 128, block_k: int = 128,
+              interpret: bool = None):
+    """Flash attention with GQA.  q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    kv_len = k.shape[1] if kv_len is None else kv_len
+    if H != KV:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, -1, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, -1, hd)
+    bq = min(block_q, max(Sq, 1))
+    bk = min(block_k, kf.shape[1])
+    qf, _ = _pad_to(qf, 1, bq)
+    kf, _ = _pad_to(kf, 1, bk)
+    vf, _ = _pad_to(vf, 1, bk)
+    o = flash_attention_bh(qf, kf, vf, causal=causal, q_offset=q_offset,
+                           kv_len=kv_len, block_q=bq, block_k=bk,
+                           interpret=interpret)
+    o = o[:, :Sq].reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+    return o.astype(q.dtype)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, block_table, seq_lens, *,
+                    interpret: bool = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return paged_decode_attention(q, k_pages, v_pages, block_table,
+                                  seq_lens, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(xh, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return ssd_scan(xh, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)

@@ -1,0 +1,83 @@
+"""Paged decode-attention Pallas TPU kernel (decode hot spot).
+
+One query token per sequence attends to a KV cache scattered across pages
+(PagedAttention re-tiled for TPU): the grid is (batch,), the per-sequence
+block table arrives via scalar prefetch (pltpu.PrefetchScalarGridSpec), and
+pages are DMA'd from HBM (memory_space=ANY) into VMEM one page at a time
+with ``pl.load`` — the TPU analogue of the CUDA gather loop.  Flash-style
+online softmax runs as a fori_loop carry, GQA handled by grouping q heads
+over KV heads inside the tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(table_ref, len_ref, q_ref, k_pages_ref, v_pages_ref,
+                  o_ref, *, scale: float, max_pages: int, page: int,
+                  n_kvh: int, group: int, hd: int):
+    b = pl.program_id(0)
+    q = q_ref[0].astype(jnp.float32)                     # (H, hd)
+    q = q.reshape(n_kvh, group, hd)
+    seq_len = len_ref[b]
+
+    def body(i, carry):
+        m, l, acc = carry
+        pid = table_ref[b, i]
+        k = k_pages_ref[pl.dslice(pid, 1)][0].astype(jnp.float32)
+        v = v_pages_ref[pl.dslice(pid, 1)][0].astype(jnp.float32)
+        s = jnp.einsum("kgd,pkd->kgp", q, k) * scale       # (KVH,G,page)
+        pos = i * page + jax.lax.broadcasted_iota(
+            jnp.int32, (n_kvh, group, page), 2)
+        s = jnp.where(pos < seq_len, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum("kgp,pkd->kgd", p, v)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((n_kvh, group, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((n_kvh, group, 1), jnp.float32)
+    a0 = jnp.zeros((n_kvh, group, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, max_pages, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)
+    o_ref[0] = out.reshape(n_kvh * group, hd).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens, *,
+                           scale: float = None, interpret: bool = True):
+    """q: (B, H, hd); k/v_pages: (n_pages, page, KVH, hd);
+    block_table: (B, max_pages) int32; seq_lens: (B,) int32."""
+    B, H, hd = q.shape
+    n_pages, page, KVH, _ = k_pages.shape
+    max_pages = block_table.shape[1]
+    assert H % KVH == 0
+    group = H // KVH
+    scale = hd ** -0.5 if scale is None else scale
+
+    kernel = functools.partial(
+        _paged_kernel, scale=scale, max_pages=max_pages, page=page,
+        n_kvh=KVH, group=group, hd=hd)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                     # block_table, seq_lens
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, *_: (b, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),     # pages stay in HBM
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, *_: (b, 0, 0)),
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, seq_lens, q, k_pages, v_pages)

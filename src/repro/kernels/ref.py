@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_attention_bh(q, k, v, *, causal=True, q_offset=0, kv_len=None,
+                     scale=None):
+    """q: (BH, Sq, hd), k/v: (BH, Sk, hd)."""
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    kv_len = Sk if kv_len is None else kv_len
+    scale = hd ** -0.5 if scale is None else scale
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = k_pos < kv_len
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ref_paged_decode(q, k_pages, v_pages, block_table, seq_lens, *,
+                     scale=None):
+    """Decode attention against a paged KV cache.
+
+    q: (B, H, hd); k/v_pages: (n_pages, page, KVH, hd);
+    block_table: (B, max_pages) int32; seq_lens: (B,) int32.
+    """
+    B, H, hd = q.shape
+    n_pages, page, KVH, _ = k_pages.shape
+    max_pages = block_table.shape[1]
+    G = H // KVH
+    scale = hd ** -0.5 if scale is None else scale
+    out = []
+    for b in range(B):
+        ks = k_pages[block_table[b]].reshape(max_pages * page, KVH, hd)
+        vs = v_pages[block_table[b]].reshape(max_pages * page, KVH, hd)
+        ks = jnp.repeat(ks, G, axis=1)          # (S, H, hd)
+        vs = jnp.repeat(vs, G, axis=1)
+        s = jnp.einsum("hd,shd->hs", q[b].astype(jnp.float32),
+                       ks.astype(jnp.float32)) * scale
+        valid = jnp.arange(max_pages * page) < seq_lens[b]
+        s = jnp.where(valid[None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out.append(jnp.einsum("hs,shd->hd", p, vs.astype(jnp.float32)))
+    return jnp.stack(out).astype(q.dtype)
+
+
+def ref_ssd(xh, dt, A, Bm, Cm, init_state=None):
+    """Sequential (token-by-token) SSD recurrence — the slowest, most
+    obviously-correct oracle.
+
+    xh: (B,S,H,P)  dt: (B,S,H)  A: (H,)  Bm/Cm: (B,S,N).
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N)) in float32.
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    h = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+         else init_state.astype(jnp.float32))
+    ys = []
+    for t in range(S):
+        dA = jnp.exp(dt[:, t] * A[None, :])                 # (B,H)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, t].astype(jnp.float32),
+                         Bm[:, t].astype(jnp.float32),
+                         xh[:, t].astype(jnp.float32))
+        h = h * dA[..., None, None] + dBx
+        ys.append(jnp.einsum("bn,bhpn->bhp", Cm[:, t].astype(jnp.float32), h))
+    return jnp.stack(ys, axis=1), h

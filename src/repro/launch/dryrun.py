@@ -1,0 +1,202 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) pair on the
+production mesh and extract memory / cost / collective statistics.
+
+MUST be run as its own process (python -m repro.launch.dryrun ...): the two
+lines above run before any jax import so the 512 placeholder devices exist
+when the mesh is built.  Smoke tests and benches never import this module.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import ASSIGNED, get_config      # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo   # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import SHAPES, build, shape_supported  # noqa: E402
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape literal like 'bf16[16,128,512]'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the compiled HLO."""
+    stats = {op: {"count": 0, "bytes": 0} for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)", s)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        stats[op]["count"] += 1
+        stats[op]["bytes"] += _shape_bytes(shape_str)
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    stats["total_count"] = sum(v["count"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+OPT_VARIANT = dict(attn_impl="chunked", mla_absorb=True, remat=True)
+OPT_MICROBATCHES = 8
+
+
+def run_one(arch: str, shape: str, multi_pod: bool = False,
+            out_dir: str = "experiments/dryrun",
+            variant: str = "baseline") -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if variant == "opt":
+        cfg = dataclasses.replace(cfg, **OPT_VARIANT)
+    ok, reason = shape_supported(cfg, shape)
+    rec = {"arch": arch, "shape": shape, "variant": variant,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "n_chips": 512 if multi_pod else 256}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            tag = f"{arch}_{shape}_{rec['mesh'].replace('x', '-')}"
+            with open(os.path.join(out_dir, f"{tag}.json"), "w") as f:
+                json.dump(rec, f, indent=1)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with mesh:
+            fn, args = build(cfg, shape, mesh,
+                             microbatches=(OPT_MICROBATCHES
+                                           if variant == "opt" else 1))
+            donate = ()
+            if variant == "opt":
+                # donate state buffers: params+opt for train, cache for
+                # serve/prefill (Perf iteration 4)
+                donate = (0, 1) if shape == "train_4k" else (2,)
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        coll = collective_stats(hlo)
+        # trip-count-aware re-analysis (XLA counts while bodies once)
+        deep = analyze_hlo(hlo)
+        rec.update(
+            status="ok",
+            compile_s=round(time.time() - t0, 1),
+            flops=float(deep["flops"]),
+            hlo_bytes=float(deep["bytes"]),
+            flops_xla_raw=float(cost.get("flops", 0.0)),
+            bytes_xla_raw=float(cost.get("bytes accessed", 0.0)),
+            utilization=None,
+            memory=dict(
+                argument_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+                output_bytes=int(getattr(mem, "output_size_in_bytes", 0)),
+                temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+                generated_code_bytes=int(
+                    getattr(mem, "generated_code_size_in_bytes", 0)),
+            ),
+            collectives=deep["collectives"] | {
+                "total_bytes": deep["collective_bytes"],
+                "static_unrolled": coll},
+            params=cfg.param_count(),
+            params_active=cfg.active_param_count(),
+            kv_bytes_per_token=cfg.kv_bytes_per_token(),
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:],
+                   compile_s=round(time.time() - t0, 1))
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}_{shape}_{rec['mesh'].replace('x', '-')}"
+        if variant != "baseline":
+            tag += f"_{variant}"
+        from repro.launch.steps import SHARD_MODE as _SM
+        if _SM["mode"] != "fsdp":
+            tag += f"_{_SM['mode']}"
+        with open(os.path.join(out_dir, f"{tag}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--include-swa", action="store_true",
+                    help="also run the beyond-paper qwen3 SWA variant")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "opt"])
+    ap.add_argument("--shard", default="fsdp", choices=["fsdp", "tp"])
+    args = ap.parse_args()
+    from repro.launch.steps import SHARD_MODE
+    SHARD_MODE["mode"] = args.shard
+
+    if args.all:
+        archs = list(ASSIGNED) + (["qwen3-1.7b-swa"] if args.include_swa
+                                  else [])
+        shapes = list(SHAPES)
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        archs, shapes = [args.arch], [args.shape]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            rec = run_one(arch, shape, args.multi_pod, args.out,
+                          variant=args.variant)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                gb = rec["memory"]["argument_bytes"] / rec["n_chips"] / 2**30
+                extra = (f"flops={rec['flops']:.3e} "
+                         f"args/chip={gb:.2f}GiB "
+                         f"coll={rec['collectives']['total_bytes']:.3e}B "
+                         f"compile={rec['compile_s']}s")
+            elif status == "skipped":
+                extra = rec["reason"]
+            else:
+                extra = rec["error"][:160]
+                n_fail += 1
+            print(f"[{status:7s}] {arch:24s} {shape:12s} {rec['mesh']:8s} "
+                  f"{extra}", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

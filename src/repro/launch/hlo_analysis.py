@@ -1,0 +1,298 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+so models whose layer stack is a ``lax.scan`` (all of ours — required to
+keep 512-device compiles tractable) under-report per-layer FLOPs, bytes and
+collectives by a factor of n_layers.  This module re-derives the counts
+from ``compiled.as_text()``:
+
+  * parses every computation, op result shapes, and operand names
+    (compiled HLO references operands by name, so shapes are resolved
+    through a per-computation symbol table),
+  * extracts while-loop trip counts from the loop condition's comparison
+    constant and multiplies body contributions, recursing through
+    fusions / calls / conditionals,
+  * FLOPs: 2*prod(result)*prod(contracting dims) for dots, ~1/elem for
+    elementwise; bytes: operands + results per op (HLOCostAnalysis
+    convention); collective bytes: result shapes of all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Shapes in the partitioned module are per-device, so all outputs are
+per-chip quantities — exactly what the roofline terms need.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_EQ = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPCODE = re.compile(r"\s*([\w\-]+)\(")
+_COMP_HEADER = re.compile(
+    r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+
+
+def _parse_op_line(line: str):
+    """Parse '%name = <result-shape> opcode(args...), attrs' robustly.
+
+    The result may be a tuple '(s32[], bf16[..] /*index=5*/, ...)' which
+    can contain '=' inside comments — handled by paren counting.
+    """
+    m = _NAME_EQ.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    n = len(line)
+    if i < n and line[i] == "(":        # tuple-typed result
+        depth = 0
+        j = i
+        while j < n:
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        result = line[i:j + 1]
+        rest_start = j + 1
+    else:                                # scalar/array result token
+        j = i
+        while j < n and not line[j].isspace():
+            j += 1
+        result = line[i:j]
+        rest_start = j
+    m2 = _OPCODE.match(line, rest_start)
+    if not m2:
+        return None
+    opcode = m2.group(1)
+    return Op(name=name, result=result, opcode=opcode,
+              rest=line[m2.end():])
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                  "divide", "logistic", "sine", "cosine",
+                  "exponential-minus-one"}
+ELEMENTWISE = {"add", "subtract", "multiply", "maximum", "minimum",
+               "compare", "select", "and", "or", "negate", "abs",
+               "clamp"} | TRANSCENDENTAL
+
+
+def _elems(shape_str: str) -> int:
+    m = _SHAPE.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(shape_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _dims(shape_str: str) -> list[int]:
+    m = _SHAPE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result: str
+    opcode: str
+    rest: str
+
+    def args_str(self) -> str:
+        depth, end = 1, len(self.rest)
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        return self.rest[:end]
+
+    def operand_names(self) -> list[str]:
+        return re.findall(r"%([\w.\-]+)", self.args_str())
+
+    def attr(self, key: str) -> Optional[str]:
+        m = re.search(rf"{key}=%?([\w.\-]+)", self.rest)
+        return m.group(1) if m else None
+
+    def attr_list(self, key: str) -> list[str]:
+        m = re.search(rf"{key}=\{{([^}}]*)\}}", self.rest)
+        if not m:
+            one = self.attr(key)
+            return [one] if one else []
+        return re.findall(r"%?([\w.\-]+)", m.group(1))
+
+
+def parse_computations(text: str):
+    comps: dict[str, list[Op]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEADER.match(line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+            continue
+        if line.strip().startswith("}"):
+            cur = None
+            continue
+        op = _parse_op_line(line)
+        if op is not None:
+            comps[cur].append(op)
+    return comps, entry
+
+
+def _trip_count(cond_ops: list[Op]) -> int:
+    best = 1
+    for op in cond_ops:
+        if op.opcode == "constant":
+            for mm in re.finditer(r"(\d+)", op.args_str()[:64]):
+                best = max(best, int(mm.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_counts: dict = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+    coll_bytes_by: dict = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+
+    def add(self, other: "Costs", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for c in COLLECTIVES:
+            self.coll_counts[c] += other.coll_counts[c] * mult
+            self.coll_bytes_by[c] += other.coll_bytes_by[c] * mult
+
+
+def analyze_hlo(text: str) -> dict:
+    comps, entry = parse_computations(text)
+    shape_of: dict[str, str] = {}
+    for ops in comps.values():
+        for op in ops:
+            shape_of[op.name] = op.result
+    memo: dict[str, Costs] = {}
+
+    def dot_flops(op: Op) -> float:
+        res = _elems(op.result)
+        contract = 1
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+        names = op.operand_names()
+        if m and names:
+            lhs_shape = shape_of.get(names[0], "")
+            dims = _dims(lhs_shape)
+            if m.group(1):
+                for idx in m.group(1).split(","):
+                    i = int(idx)
+                    if i < len(dims):
+                        contract *= dims[i]
+        return 2.0 * res * contract
+
+    def comp_cost(name: str, stack=(), fused: bool = False) -> Costs:
+        key = (name, fused)
+        if key in memo:
+            return memo[key]
+        if name in stack or name not in comps:
+            return Costs()
+        total = Costs()
+        for op in comps[name]:
+            oc = op.opcode
+            if oc == "while":
+                cond = op.attr("condition")
+                body = op.attr("body")
+                trips = _trip_count(comps.get(cond, [])) if cond else 1
+                if body:
+                    total.add(comp_cost(body, stack + (name,), fused), trips)
+                if cond:
+                    total.add(comp_cost(cond, stack + (name,), fused), trips)
+                continue
+            called, called_fused = [], fused
+            if oc == "fusion":
+                # ops inside a fusion keep intermediates in registers/VMEM:
+                # count their flops but not their bytes
+                called = op.attr_list("calls")
+                called_fused = True
+            elif oc in ("call", "map", "custom-call"):
+                called = op.attr_list("calls") + op.attr_list("to_apply")
+            elif oc == "conditional":
+                called = op.attr_list("branch_computations")
+            elif oc in ("reduce", "reduce-window", "scatter", "sort",
+                        "select-and-scatter", "all-reduce",
+                        "reduce-scatter"):
+                called = op.attr_list("to_apply")
+                called_fused = True     # tiny scalar combiner
+            for c in called:
+                if c:
+                    total.add(comp_cost(c, stack + (name,), called_fused),
+                              _elems(op.result) if oc in (
+                                  "reduce", "reduce-window") else 1.0)
+            if oc == "dot":
+                total.flops += dot_flops(op)
+            elif oc in ELEMENTWISE:
+                total.flops += _elems(op.result) * (
+                    3.0 if oc in TRANSCENDENTAL else 1.0)
+            elif oc in COLLECTIVES:
+                b = _bytes(op.result)
+                total.coll_bytes += b
+                total.coll_counts[oc] += 1
+                total.coll_bytes_by[oc] += b
+            # bytes at fusion boundaries only (HBM-traffic proxy)
+            if not fused and oc not in (
+                    "parameter", "constant", "tuple",
+                    "get-tuple-element", "bitcast"):
+                total.bytes += _bytes(op.result)
+                for n in op.operand_names():
+                    total.bytes += _bytes(shape_of.get(n, ""))
+        memo[key] = total
+        return total
+
+    if entry is None:
+        cands = [n for n in comps if "main" in n] or list(comps)
+        entry = cands[0]
+    c = comp_cost(entry)
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "collective_bytes": c.coll_bytes,
+        "collectives": {k: {"count": c.coll_counts[k],
+                            "bytes": c.coll_bytes_by[k]}
+                        for k in COLLECTIVES},
+        "n_computations": len(comps),
+    }

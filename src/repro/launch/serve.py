@@ -1,0 +1,70 @@
+"""Serving launcher: SLOs-Serve scheduler driving the JAX engine end-to-end
+through the ServingFrontend (serving/frontend.py).
+
+The planner runs against the paper's performance model in VIRTUAL time (the
+model stands in for the TPU the plan would execute on); the engine executes
+every planned token for real on CPU with a reduced config.  This exercises
+the full integration — admission, chunked prefill, batched decode, KV
+paging, tool loops, SLO accounting.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
+      --rate 2.0 --duration 8
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_reduced
+from repro.core.perf_model import PerfModel
+from repro.core.scheduler import SchedulerConfig, SLOsServeScheduler
+from repro.core.workload import generate_workload
+from repro.models import init_encdec_params, init_params
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.frontend import ServingFrontend
+
+# Virtual-chip model scaled to the shrunken request lengths (~200 tok/s
+# with a 20 ms weight-read floor) so TTFT/TPOT SLOs stay meaningful.
+VIRTUAL_PERF = PerfModel(terms=((5e-3, 0.0, 1e-3), (5e-4, 0.0, 2e-2)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--scenario", default="chatbot")
+    ap.add_argument("--rate", type=float, default=2.0)
+    ap.add_argument("--duration", type=float, default=8.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--time-scale", type=float, default=0.02,
+                    help="shrink request lengths to CPU scale")
+    ap.add_argument("--max-requests", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    init = init_encdec_params if cfg.arch_type == "encdec" else init_params
+    params = init(key, cfg)
+    engine = ServingEngine(cfg, params,
+                           EngineConfig(max_slots=8, max_len=256,
+                                        total_pages=256))
+    sched = SLOsServeScheduler(VIRTUAL_PERF, SchedulerConfig(
+        prefill_emits_first_token=True))
+    fe = ServingFrontend(engine, sched, seed=args.seed)
+
+    reqs = generate_workload(args.scenario, args.rate, args.duration,
+                             args.seed)[:args.max_requests]
+    for r in reqs:
+        for i, s in enumerate(r.stages):
+            r.stages[i] = type(s)(s.slo, max(4, int(s.length
+                                                    * args.time_scale)))
+        fe.submit(r)
+    stats = fe.run_until_idle()
+    print(f"served {stats.served}/{stats.submitted} requests "
+          f"({stats.dropped} dropped), {stats.tokens_out} tokens generated "
+          f"by the engine, SLO attained {stats.attained}/{stats.served} "
+          f"(virtual time {fe.clock:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

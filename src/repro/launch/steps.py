@@ -1,0 +1,240 @@
+"""Step functions + abstract input specs for the four assigned input shapes.
+
+  train_4k      seq 4,096   global_batch 256   -> train_step
+  prefill_32k   seq 32,768  global_batch 32    -> prefill_step
+  decode_32k    seq 32,768  global_batch 128   -> serve_step (1 new token
+                                                  against a 32k cache)
+  long_500k     seq 524,288 global_batch 1     -> serve_step, sub-quadratic
+                                                  archs only (+ SWA variant)
+
+Everything here is allocation-free: parameters, optimizer state, caches and
+batches are ``jax.ShapeDtypeStruct`` trees with NamedShardings attached, fed
+straight to ``jit(...).lower()`` in dryrun.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (batch_spec, cache_shardings,
+                                        params_shardings)
+from repro.models.config import ModelConfig
+from repro.models.encdec import encoder_forward, init_encdec_params
+from repro.models.transformer import (init_cache, init_params, logits_fn,
+                                      model_forward)
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.training.train_loop import lm_loss
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def shape_supported(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """Is (arch x shape) runnable?  Returns (ok, reason-if-skipped)."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 500k decode is quadratic; "
+                       "run the -swa variant instead (DESIGN.md)")
+    if shape == "long_500k" and cfg.arch_type == "encdec":
+        return False, "whisper decoder has no 500k-token decode use-case"
+    return True, ""
+
+
+def _with_sharding(tree_shape, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_shape, shardings)
+
+
+SHARD_MODE = {"mode": "fsdp"}      # overridable knob (dryrun --shard tp)
+
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh, dtype=jnp.bfloat16):
+    if cfg.arch_type == "encdec":
+        pshape = jax.eval_shape(
+            partial(init_encdec_params, cfg=cfg, dtype=dtype),
+            jax.random.PRNGKey(0))
+    else:
+        pshape = jax.eval_shape(partial(init_params, cfg=cfg, dtype=dtype),
+                                jax.random.PRNGKey(0))
+    return _with_sharding(pshape, params_shardings(
+        pshape, cfg, mesh, SHARD_MODE["mode"]))
+
+
+# ------------------------------ train ---------------------------------- #
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = None,
+                    microbatches: int = 1):
+    """microbatches > 1: gradient accumulation over batch slices — the
+    §Perf memory iteration that bounds live activations to one microbatch
+    (scan carry holds only the f32 grad sum)."""
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def grads_of(params, tokens, labels, enc):
+        (loss, parts), grads = jax.value_and_grad(lm_loss, has_aux=True)(
+            params, cfg, tokens, labels, enc_states=enc)
+        return loss, parts, grads
+
+    def train_step(params, opt_state, batch):
+        enc = batch.get("enc_states")
+        if microbatches == 1:
+            loss, parts, grads = grads_of(params, batch["tokens"],
+                                          batch["labels"], enc)
+        else:
+            def split(x):
+                return x.reshape(microbatches,
+                                 x.shape[0] // microbatches, *x.shape[1:])
+            mb = {"tokens": split(batch["tokens"]),
+                  "labels": split(batch["labels"])}
+            if enc is not None:
+                mb["enc_states"] = split(enc)
+
+            def acc(carry, b):
+                gsum, lsum, asum = carry
+                loss, parts, grads = grads_of(
+                    params, b["tokens"], b["labels"],
+                    b.get("enc_states"))
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                return (gsum, lsum + loss, asum + parts["aux"]), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum, asum), _ = jax.lax.scan(
+                acc, (g0, jnp.zeros((), jnp.float32),
+                      jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            parts = {"nll": loss, "aux": asum / microbatches}
+        params, opt_state, om = adamw_update(opt_cfg, params, grads,
+                                             opt_state)
+        return params, opt_state, {"loss": loss, **parts, **om}
+
+    return train_step
+
+
+def train_inputs(cfg: ModelConfig, mesh: Mesh, seq_len: int,
+                 global_batch: int, dtype=jnp.bfloat16):
+    params = abstract_params(cfg, mesh, dtype)
+    opt = jax.eval_shape(init_opt_state, params)
+    opt = _with_sharding(opt, {
+        "mu": params_shardings(opt["mu"], cfg, mesh, SHARD_MODE["mode"]),
+        "nu": params_shardings(opt["nu"], cfg, mesh, SHARD_MODE["mode"]),
+        "step": NamedSharding(mesh, P())})
+    bs = NamedSharding(mesh, batch_spec(mesh, global_batch))
+    # enc-dec / VLM train on (frames|image embeddings) + text
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32,
+                                       sharding=bs),
+        "labels": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32,
+                                       sharding=bs),
+    }
+    enc = _enc_input(cfg, mesh, global_batch, dtype)
+    if enc is not None:
+        batch["enc_states"] = enc
+    return params, opt, batch
+
+
+def _enc_input(cfg: ModelConfig, mesh: Mesh, batch: int, dtype):
+    """Stubbed modality frontend output (frames / image patches)."""
+    n = 0
+    if cfg.arch_type == "vlm":
+        n = cfg.n_image_tokens
+    elif cfg.arch_type == "encdec":
+        n = cfg.encoder.n_frames
+    if n == 0:
+        return None
+    sh = NamedSharding(mesh, batch_spec(mesh, batch, extra_dims=2))
+    return jax.ShapeDtypeStruct((batch, n, cfg.d_model), dtype, sharding=sh)
+
+
+# ----------------------------- prefill --------------------------------- #
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, tokens, cache, enc_in):
+        B = tokens.shape[0]
+        pos0 = jnp.zeros((B,), jnp.int32)
+        enc_states = enc_in
+        if cfg.arch_type == "encdec" and enc_in is not None:
+            enc_states = encoder_forward(params["encoder"], cfg, enc_in)
+        h, cache, _ = model_forward(params, cfg, tokens, cache=cache,
+                                    pos0=pos0, enc_states=enc_states)
+        # serving prefill returns ONLY the last position's logits (vocab-
+        # sized logits over 32k positions would dwarf every other tensor)
+        logits = logits_fn(params, cfg, h[:, -1:, :])
+        return logits, cache
+
+    return prefill_step
+
+
+def prefill_inputs(cfg: ModelConfig, mesh: Mesh, seq_len: int,
+                   global_batch: int, dtype=jnp.bfloat16):
+    params = abstract_params(cfg, mesh, dtype)
+    bs = NamedSharding(mesh, batch_spec(mesh, global_batch))
+    tokens = jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32,
+                                  sharding=bs)
+    cache = _abstract_cache(cfg, mesh, global_batch, seq_len, dtype)
+    enc = _enc_input(cfg, mesh, global_batch, dtype)
+    return params, tokens, cache, enc
+
+
+# ------------------------------ decode --------------------------------- #
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, tokens, cache, pos0, enc_in):
+        enc_states = enc_in
+        if cfg.arch_type == "encdec" and enc_in is not None:
+            enc_states = encoder_forward(params["encoder"], cfg, enc_in)
+        h, cache, _ = model_forward(params, cfg, tokens, cache=cache,
+                                    pos0=pos0, enc_states=enc_states)
+        logits = logits_fn(params, cfg, h)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step
+
+
+def decode_inputs(cfg: ModelConfig, mesh: Mesh, seq_len: int,
+                  global_batch: int, dtype=jnp.bfloat16):
+    params = abstract_params(cfg, mesh, dtype)
+    seq_shard = global_batch == 1          # long-context: shard the KV seq
+    bs = NamedSharding(mesh, batch_spec(mesh, global_batch))
+    tokens = jax.ShapeDtypeStruct((global_batch, 1), jnp.int32, sharding=bs)
+    bs1 = NamedSharding(mesh, batch_spec(mesh, global_batch, extra_dims=0))
+    pos0 = jax.ShapeDtypeStruct((global_batch,), jnp.int32, sharding=bs1)
+    cache = _abstract_cache(cfg, mesh, global_batch, seq_len, dtype,
+                            seq_shard=seq_shard)
+    enc = _enc_input(cfg, mesh, global_batch, dtype)
+    return params, tokens, cache, pos0, enc
+
+
+def _abstract_cache(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
+                    dtype, seq_shard: bool = False):
+    cshape = jax.eval_shape(
+        partial(init_cache, cfg, batch, max_len, dtype))
+    return _with_sharding(
+        cshape, cache_shardings(cshape, cfg, mesh, batch,
+                                seq_shard=seq_shard))
+
+
+# ------------------------------ registry -------------------------------- #
+def build(cfg: ModelConfig, shape: str, mesh: Mesh, dtype=jnp.bfloat16,
+          microbatches: int = 1):
+    """Returns (step_fn, abstract_args tuple) for jit(...).lower(*args)."""
+    info = SHAPES[shape]
+    S, B = info["seq_len"], info["global_batch"]
+    if info["kind"] == "train":
+        fn = make_train_step(cfg, microbatches=microbatches)
+        args = train_inputs(cfg, mesh, S, B, dtype)
+    elif info["kind"] == "prefill":
+        fn = make_prefill_step(cfg)
+        args = prefill_inputs(cfg, mesh, S, B, dtype)
+    else:
+        fn = make_serve_step(cfg)
+        args = decode_inputs(cfg, mesh, S, B, dtype)
+    return fn, args

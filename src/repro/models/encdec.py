@@ -1,0 +1,74 @@
+"""Encoder–decoder (Whisper-style) backbone [arXiv:2212.04356].
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment
+carve-out: the encoder consumes precomputed frame embeddings (B, T, D)
+supplied by ``input_specs()``.  Everything downstream — the bidirectional
+encoder stack, the causal decoder with per-layer cross-attention, KV caches
+for serving — is fully implemented.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attn_forward, attn_output, init_attn
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+from repro.models.transformer import init_params as init_decoder_params
+from repro.models.transformer import model_forward as decoder_forward
+
+
+def init_encoder(key, cfg: ModelConfig, dtype=jnp.float32):
+    enc = cfg.encoder
+    d = enc.d_model or cfg.d_model
+    n = enc.n_layers
+    ks = jax.random.split(key, 3)
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {"norm1": init_norm(d, "layernorm"),
+                "attn": init_attn(k1, cfg, dtype=dtype),
+                "norm2": init_norm(d, "layernorm"),
+                "mlp": init_mlp(k2, d, 4 * d, act="gelu",
+                                use_bias=cfg.use_bias, dtype=dtype)}
+
+    layers = jax.vmap(one)(jax.random.split(ks[0], n))
+    return {"layers": layers,
+            "pos": jax.random.normal(ks[1], (enc.n_frames, d), dtype) * 0.02,
+            "final_norm": init_norm(d, "layernorm")}
+
+
+def encoder_forward(params, cfg: ModelConfig, frames):
+    """frames: (B, T, D) precomputed conv-frontend embeddings (stub)."""
+    B, T, _ = frames.shape
+    x = frames + params["pos"][None, :T]
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+
+    def body(x, p):
+        h = apply_norm(p["norm1"], x, "layernorm")
+        ctx, _ = attn_forward(p["attn"], h, cfg, positions=positions,
+                              causal=False)
+        x = x + attn_output(p["attn"], ctx)
+        h2 = apply_norm(p["norm2"], x, "layernorm")
+        x = x + apply_mlp(p["mlp"], h2, "gelu")
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return apply_norm(params["final_norm"], x, "layernorm")
+
+
+# --------------------------- whole enc-dec ------------------------------ #
+def init_encdec_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    params = init_decoder_params(k1, cfg, dtype)
+    params["encoder"] = init_encoder(k2, cfg, dtype)
+    return params
+
+
+def encdec_forward(params, cfg: ModelConfig, frames, tokens, *,
+                   cache=None, pos0=None, enc_states=None):
+    """Run encoder (unless enc_states given) then the cross-attn decoder."""
+    if enc_states is None:
+        enc_states = encoder_forward(params["encoder"], cfg, frames)
+    return decoder_forward(params, cfg, tokens, cache=cache, pos0=pos0,
+                           enc_states=enc_states)

@@ -1,0 +1,112 @@
+"""Mixture-of-Experts FFN: top-k routing, shared experts, load balancing.
+
+Default dispatch is capacity-based scatter/gather (GShard/Switch style):
+each (token, slot) unit is scattered into a per-expert buffer of capacity
+C = ceil(cf * k * T / E), experts run dense matmuls over their buffers, and
+outputs are gathered back with the router combine weights.  This keeps
+compiled FLOPs proportional to *active* experts (top-k), shards with expert
+parallelism (experts axis on the "model" mesh axis), and has fully static
+shapes.  Tokens overflowing an expert's capacity are dropped (standard
+Switch behaviour) — the load-balance aux loss keeps this rare.
+
+``mode="dense"`` computes every expert on every token (exact, no drops) —
+used as the small-shape reference oracle in tests.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.moe
+    d, f = cfg.d_model, m.d_ff_expert
+    ks = jax.random.split(key, 7)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    p = {
+        "router": jax.random.normal(ks[0], (d, m.n_experts), jnp.float32) * s_in,
+        "w_gate": jax.random.normal(ks[1], (m.n_experts, d, f), dtype) * s_in,
+        "w_up": jax.random.normal(ks[2], (m.n_experts, d, f), dtype) * s_in,
+        "w_down": jax.random.normal(ks[3], (m.n_experts, f, d), dtype) * s_out,
+    }
+    if m.n_shared:
+        p["shared_gate"] = jax.random.normal(
+            ks[4], (d, m.n_shared * f), dtype) * s_in
+        p["shared_up"] = jax.random.normal(
+            ks[5], (d, m.n_shared * f), dtype) * s_in
+        p["shared_down"] = jax.random.normal(
+            ks[6], (m.n_shared * f, d), dtype) * s_out
+    return p
+
+
+def _route(p, xt, m):
+    logits = xt.astype(jnp.float32) @ p["router"]            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, m.top_k)               # (T, k)
+    topv = topv / jnp.clip(jnp.sum(topv, axis=-1, keepdims=True), 1e-9)
+    return probs, topv, topi
+
+
+def _expert_ffn(p, h_in):
+    """h_in: (E, C, D) -> (E, C, D)."""
+    g = jnp.einsum("ecd,edf->ecf", h_in, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", h_in, p["w_up"])
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["w_down"])
+
+
+def moe_forward(p, x, cfg: ModelConfig, mode: str = "dispatch",
+                capacity_factor=None):
+    """Returns (out, aux) where aux carries load-balance terms.
+
+    capacity_factor None -> 2.0 (training/dry-run default).  Any value
+    >= n_experts/top_k makes dispatch provably dropless (C >= T), the
+    exact-inference setting used by the serving engine and tests."""
+    m = cfg.moe
+    if capacity_factor is None:
+        capacity_factor = 2.0
+    B, S, D = x.shape
+    xt = x.reshape(-1, D)
+    T = xt.shape[0]
+    probs, topv, topi = _route(p, xt, m)
+
+    if mode == "dense":
+        combine = jnp.zeros_like(probs)
+        combine = jax.vmap(lambda c, i, v: c.at[i].set(v))(combine, topi, topv)
+        combine = combine.astype(x.dtype)
+        h_g = jnp.einsum("td,edf->etf", xt, p["w_gate"])
+        h_u = jnp.einsum("td,edf->etf", xt, p["w_up"])
+        h = jax.nn.silu(h_g) * h_u
+        eo = jnp.einsum("etf,efd->etd", h, p["w_down"])
+        out = jnp.einsum("etd,te->td", eo, combine)
+    else:
+        E, k = m.n_experts, m.top_k
+        C = max(1, math.ceil(capacity_factor * k * T / E))
+        e_u = topi.reshape(-1)                               # (T*k,)
+        w_u = topv.reshape(-1).astype(x.dtype)
+        t_u = jnp.repeat(jnp.arange(T), k)
+        # position of each unit within its expert queue
+        oh = jax.nn.one_hot(e_u, E, dtype=jnp.int32)         # (Tk, E)
+        pos_u = (jnp.cumsum(oh, axis=0) - oh)[jnp.arange(e_u.shape[0]), e_u]
+        keep = pos_u < C
+        pos_c = jnp.where(keep, pos_u, C - 1)
+        vals = xt[t_u] * keep[:, None].astype(x.dtype)
+        buf = jnp.zeros((E, C, D), x.dtype).at[e_u, pos_c].add(
+            vals, mode="drop")
+        eo = _expert_ffn(p, buf)                             # (E, C, D)
+        unit_out = eo[e_u, pos_c] * (w_u * keep.astype(x.dtype))[:, None]
+        out = jnp.zeros((T, D), x.dtype).at[t_u].add(unit_out, mode="drop")
+
+    if m.n_shared:
+        sh = jax.nn.silu(xt @ p["shared_gate"]) * (xt @ p["shared_up"])
+        out = out + sh @ p["shared_down"]
+
+    density = jnp.mean(
+        jax.nn.one_hot(topi, m.n_experts, dtype=jnp.float32).sum(1), axis=0)
+    router_mean = jnp.mean(probs, axis=0)
+    aux_loss = m.n_experts * jnp.sum(density / m.top_k * router_mean)
+    return out.reshape(B, S, D), {"aux_loss": aux_loss,
+                                  "expert_density": density}

@@ -1,0 +1,179 @@
+"""Mamba2 (SSD — state-space duality) mixer block [arXiv:2405.21060].
+
+Prefill/train uses the chunked SSD algorithm: the sequence is split into
+chunks; within a chunk the output is a masked quadratic form (attention-like,
+MXU friendly); across chunks a small recurrent state (nheads, head_dim,
+d_state) is carried by ``lax.scan``.  Decode is the O(1) recurrent update.
+
+The chunk kernel (intra-chunk quadratic + state passing) is the Pallas
+hot-spot — see kernels/ssd_scan.py; this module is the pure-jnp reference
+path used on CPU and as the kernel oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def init_ssm(key, cfg: ModelConfig, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nheads = d_in // s.head_dim
+    ks = jax.random.split(key, 5)
+    conv_ch = d_in + 2 * s.d_state
+    p = {
+        # fused input projection: [x (d_in), z (d_in), B (N), C (N), dt (H)]
+        "w_in": jax.random.normal(
+            ks[0], (d, 2 * d_in + 2 * s.d_state + nheads), dtype) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (s.d_conv, conv_ch), dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads, dtype=jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "w_out": jax.random.normal(ks[2], (d_in, d), dtype) * d_in ** -0.5,
+    }
+    return p
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    x, z, B, C, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + s.d_state,
+               2 * d_in + 2 * s.d_state], axis=-1)
+    return x, z, B, C, dt, d_in, nheads
+
+
+def _causal_conv(w, b, x, state=None):
+    """Depthwise causal conv1d.  x: (B,S,C); state: (B, d_conv-1, C)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                  # (B, S+K-1, C)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):, :] if K > 1 else pad[:, :0]
+    return jax.nn.silu(out), new_state
+
+
+def _rmsnorm_gated(scale, x, z, eps=1e-6):
+    xf = (x * jax.nn.silu(z)).astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (xf * scale).astype(x.dtype)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P)   dt: (B, S, H)   A: (H,) (negative decay rates)
+    Bm, Cm: (B, S, N)  (single SSM "group", shared across heads)
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    # scan over chunks: transients stay O(B * chunk^2 * H) regardless of S
+    xc = xh.reshape(Bsz, nc, chunk, H, P).swapaxes(0, 1)
+    dtc = dt.reshape(Bsz, nc, chunk, H).swapaxes(0, 1)
+    Bc = Bm.reshape(Bsz, nc, chunk, N).swapaxes(0, 1)
+    Cc = Cm.reshape(Bsz, nc, chunk, N).swapaxes(0, 1)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def scan_fn(h, inp):
+        xk, dtk, Bk, Ck = inp      # (B,L,H,P) (B,L,H) (B,L,N) (B,L,N)
+        dA = dtk.astype(jnp.float32) * A[None, None, :]     # (B,L,H) <= 0
+        seg = jnp.cumsum(dA, axis=1)
+        diff = seg[:, :, None, :] - seg[:, None, :, :]
+        # mask BEFORE exp: exp of the (masked) positive upper triangle
+        # overflows to inf and poisons gradients through the where
+        diff = jnp.where(mask[None, :, :, None], diff, -1e30)
+        decay = jnp.exp(diff)
+        cb = jnp.einsum("bln,bmn->blm", Ck, Bk)             # (B,L,M)
+        att = cb[..., None] * decay                         # (B,L,M,H)
+        y_intra = jnp.einsum("blmh,bmh,bmhp->blhp", att, dtk, xk)
+        # inter-chunk: contribution of the incoming state
+        y_inter = jnp.einsum("bln,blh,bhpn->blhp",
+                             Ck, jnp.exp(seg).astype(Ck.dtype),
+                             h.astype(Ck.dtype))
+        # update state to end of chunk
+        decay_to_end = jnp.exp(seg[:, -1:, :] - seg)        # (B,L,H)
+        st = jnp.einsum("bln,blh,blh,blhp->bhpn",
+                        Bk, dtk, decay_to_end.astype(Bk.dtype), xk)
+        h_new = (h * jnp.exp(jnp.sum(dA, axis=1))[..., None, None]
+                 + st.astype(jnp.float32))
+        return h_new, (y_intra + y_inter).astype(xh.dtype)
+
+    h0 = (jnp.zeros((Bsz, H, P, N), jnp.float32)
+          if init_state is None else init_state.astype(jnp.float32))
+    hT, yc = jax.lax.scan(scan_fn, h0, (xc, dtc, Bc, Cc))
+    y = yc.swapaxes(0, 1).reshape(Bsz, S, H, P)
+    return y, hT.astype(xh.dtype)
+
+
+def ssm_forward(p, x, cfg: ModelConfig, *, cache=None):
+    """Full-sequence (train/prefill) Mamba2 block.
+
+    cache: None or {"conv": (B,K-1,C), "state": (B,H,P,N)} — carried for
+    chunked prefill continuation; returned updated.
+    """
+    s = cfg.ssm
+    proj = x @ p["w_in"]
+    xi, z, Bm, Cm, dt, d_in, nheads = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _causal_conv(p["conv_w"], p["conv_b"], conv_in,
+                                      conv_state)
+    xi = conv_out[..., :d_in]
+    Bm = conv_out[..., d_in:d_in + s.d_state]
+    Cm = conv_out[..., d_in + s.d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    S = x.shape[1]
+    xh = xi.reshape(*xi.shape[:2], nheads, s.head_dim)
+    chunk = min(s.chunk_size, S)
+    if S % chunk:
+        chunk = S                    # odd smoke shapes: single chunk
+    init_state = cache["state"] if cache is not None else None
+    y, hT = ssd_chunked(xh, dt, A, Bm, Cm, chunk, init_state)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(*xi.shape[:2], d_in)
+    y = _rmsnorm_gated(p["norm_scale"], y, z)
+    out = y @ p["w_out"]
+    new_cache = ({"conv": new_conv, "state": hT}
+                 if cache is not None else None)
+    return out, new_cache
+
+
+def ssm_decode_step(p, x, cfg: ModelConfig, cache):
+    """O(1) recurrent decode.  x: (B, 1, D)."""
+    s = cfg.ssm
+    proj = x @ p["w_in"]
+    xi, z, Bm, Cm, dt, d_in, nheads = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)        # (B,1,C)
+    conv_out, new_conv = _causal_conv(p["conv_w"], p["conv_b"], conv_in,
+                                      cache["conv"])
+    xi = conv_out[..., :d_in]
+    Bm = conv_out[..., d_in:d_in + s.d_state]
+    Cm = conv_out[..., d_in + s.d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,1,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(xi.shape[0], nheads, s.head_dim)        # squeeze S=1
+    dt1 = dt[:, 0]                                          # (B,H)
+    h = cache["state"].astype(jnp.float32)                  # (B,H,P,N)
+    dA = jnp.exp(dt1 * A[None, :])                          # (B,H)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt1, Bm[:, 0].astype(jnp.float32),
+                     xh.astype(jnp.float32))
+    h = h * dA[..., None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h)
+    y = y + xh.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(x.shape[0], 1, d_in).astype(x.dtype)
+    y = _rmsnorm_gated(p["norm_scale"], y, z)
+    out = y @ p["w_out"]
+    return out, {"conv": new_conv, "state": h.astype(cache["state"].dtype)}

@@ -1,0 +1,224 @@
+"""Continuous-batching execution engine — the stateless BatchForward of
+paper Algorithm 3 made concrete in JAX.
+
+The engine executes planner ``Batch`` objects (Eqn. 1 entries):
+  * PREFILL entries process the next chunk of the request's pending context
+    (chunked prefill: any split the planner chose), padded to bucket sizes
+    to bound recompilation,
+  * DECODE entries emit tokens autoregressively (gathered into one batched
+    decode call across requests) or via speculative draft+verify when the
+    batch carries ``spec_step > 0`` and a draft model is attached
+    (serving/spec_decode.py).
+
+Memory is managed by PageAllocator (logical paging for admission /
+preemption, PagedAttention-style) and SlotCache (physical per-request cache
+slots).  The engine is deliberately host-driven: the planner (core/) decides
+every token, the engine just executes — exactly the paper's split.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batch import Batch
+from repro.core.slo import StageKind
+from repro.models.config import ModelConfig
+from repro.models.transformer import logits_fn, model_forward
+from repro.serving.kvcache import PageAllocator, SlotCache
+from repro.serving.sampling import sample
+
+
+def _bucket(n: int, buckets=(8, 16, 32, 64, 128, 256, 512, 1024, 2048)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return ((n + 2047) // 2048) * 2048
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_slots: int = 8
+    max_len: int = 512
+    page_size: int = 16
+    total_pages: int = 1024
+    dtype: object = jnp.float32
+    temperature: float = 0.0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class RequestCtx:
+    rid: int
+    prompt: list
+    pending: list            # tokens not yet prefilled (prompt or tool ctx)
+    generated: list
+    eos: Optional[int] = None
+    done: bool = False
+    enc_states: Optional[object] = None   # VLM / enc-dec conditioning
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig = None,
+                 draft: Optional[tuple] = None):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg or EngineConfig()
+        self.slots = SlotCache.create(cfg, self.ecfg.max_slots,
+                                      self.ecfg.max_len, self.ecfg.dtype)
+        self.pages = PageAllocator(self.ecfg.total_pages,
+                                   self.ecfg.page_size)
+        self.reqs: dict[int, RequestCtx] = {}
+        self.key = jax.random.PRNGKey(self.ecfg.seed)
+        self._moe_cf = (float(cfg.moe.n_experts) / cfg.moe.top_k
+                        if cfg.moe else None)
+        self._fwd = jax.jit(self._forward)
+        # speculative decoding: (draft_cfg, draft_params)
+        self.spec = None
+        if draft is not None:
+            from repro.serving.spec_decode import SpecDecoder
+            self.spec = SpecDecoder(self, draft[0], draft[1])
+
+    # ------------------------------------------------------------------ #
+    def _forward(self, params, tokens, cache, pos0, enc_states):
+        h, cache, _ = model_forward(params, self.cfg, tokens, cache=cache,
+                                    pos0=pos0, enc_states=enc_states,
+                                    moe_cf=self._moe_cf)
+        return logits_fn(params, self.cfg, h), cache
+
+    # ------------------------------------------------------------------ #
+    def add_request(self, rid: int, prompt: list, expected_total: int,
+                    enc_states=None) -> bool:
+        """Admit a request: reserve pages + a cache slot."""
+        if not self.pages.can_allocate(expected_total):
+            return False
+        if self.slots.acquire(rid) is None:
+            return False
+        self.pages.allocate(rid, expected_total)
+        self.reqs[rid] = RequestCtx(rid=rid, prompt=list(prompt),
+                                    pending=list(prompt), generated=[],
+                                    enc_states=enc_states)
+        return True
+
+    def finish(self, rid: int) -> None:
+        self.pages.release(rid)
+        self.slots.release(rid)
+        self.reqs.pop(rid, None)
+
+    def context_len(self, rid: int) -> int:
+        return int(self.slots.pos[self.slots.slot_of[rid]])
+
+    # ------------------------------------------------------------------ #
+    def execute(self, batch: Batch) -> dict[int, list]:
+        """Run one planner batch; returns {rid: emitted tokens}."""
+        emitted: dict[int, list] = {}
+        decode_rids = []
+        for e in batch.entries:
+            if e.rid not in self.reqs:
+                continue
+            if e.kind == StageKind.PREFILL:
+                first = self._prefill_chunk(e.rid, e.n_tokens)
+                emitted.setdefault(e.rid, []).extend(first)
+            else:
+                decode_rids.append((e.rid, e.n_tokens))
+        if decode_rids:
+            if batch.spec_step > 0 and self.spec is not None:
+                for rid, n in decode_rids:
+                    emitted.setdefault(rid, []).extend(
+                        self.spec.decode(rid, n))
+            else:
+                out = self._decode_batched(dict(decode_rids))
+                for rid, toks in out.items():
+                    emitted.setdefault(rid, []).extend(toks)
+        return emitted
+
+    # ------------------------------------------------------------------ #
+    def _prefill_chunk(self, rid: int, n_tokens: int) -> list:
+        ctx = self.reqs[rid]
+        chunk = ctx.pending[:n_tokens]
+        ctx.pending = ctx.pending[n_tokens:]
+        if not chunk:
+            return []
+        slot = self.slots.slot_of[rid]
+        L = len(chunk)
+        Lp = _bucket(L)
+        toks = np.zeros((1, Lp), np.int32)
+        toks[0, :L] = chunk
+        pos0 = self.slots.pos[slot][None]
+        sub = self.slots.gather([slot])
+        logits, sub = self._fwd(self.params, jnp.asarray(toks), sub, pos0,
+                                ctx.enc_states)
+        self.slots.scatter([slot], sub)
+        self.slots.pos = self.slots.pos.at[slot].add(L)
+        if not ctx.pending:
+            # prefill complete: the last position's logits yield the first
+            # output token (TTFT = time-to-FIRST-token)
+            self.key, sk = jax.random.split(self.key)
+            tok = int(np.asarray(sample(logits[0, L - 1], sk,
+                                        self.ecfg.temperature)))
+            ctx.generated.append(tok)
+            return [tok]
+        return []
+
+    # ------------------------------------------------------------------ #
+    def _decode_batched(self, steps_of) -> dict[int, list]:
+        """steps_of: {rid: n_steps} or list of rids (1 step each)."""
+        if not isinstance(steps_of, dict):
+            steps_of = {r: 1 for r in steps_of}
+        rids = list(steps_of)
+        out = {r: [] for r in rids}
+        for step in range(max(steps_of.values(), default=0)):
+            live = [r for r in rids if not self.reqs[r].done
+                    and step < steps_of[r]]
+            if not live:
+                break
+            slots = [self.slots.slot_of[r] for r in live]
+            last = [self._last_token(r) for r in live]
+            B = _bucket(len(live), (1, 2, 4, 8, 16, 32, 64, 128))
+            slots_p = slots + [slots[0]] * (B - len(slots))
+            last_p = last + [0] * (B - len(last))
+            sub = self.slots.gather(slots_p)
+            pos = self.slots.pos[jnp.asarray(slots_p)]
+            toks = jnp.asarray(last_p, jnp.int32)[:, None]
+            enc = self._gather_enc(live, B)
+            logits, sub = self._fwd(self.params, toks, sub, pos, enc)
+            self.key, sk = jax.random.split(self.key)
+            nxt = np.asarray(sample(logits[:, -1], sk,
+                                    self.ecfg.temperature))
+            # scatter back only live entries (padded tail would corrupt)
+            self.slots.scatter(slots, jax.tree.map(
+                lambda c, ax: jnp.take(c, jnp.arange(len(slots)), axis=ax),
+                sub, self.slots.axes))
+            for i, r in enumerate(live):
+                self.slots.pos = self.slots.pos.at[
+                    self.slots.slot_of[r]].add(1)
+                tok = int(nxt[i])
+                self.reqs[r].generated.append(tok)
+                out[r].append(tok)
+                if self.reqs[r].eos is not None and tok == self.reqs[r].eos:
+                    self.reqs[r].done = True
+        return out
+
+    def _gather_enc(self, rids, B):
+        encs = [self.reqs[r].enc_states for r in rids]
+        if all(e is None for e in encs):
+            return None
+        ref = next(e for e in encs if e is not None)
+        stack = [e if e is not None else jnp.zeros_like(ref) for e in encs]
+        stack += [jnp.zeros_like(ref)] * (B - len(stack))
+        return jnp.concatenate(stack, axis=0)
+
+    def _last_token(self, rid: int) -> int:
+        ctx = self.reqs[rid]
+        if ctx.generated:
+            return ctx.generated[-1]
+        return ctx.prompt[-1] if ctx.prompt else 0
+
+    def rollback(self, rid: int, n_tokens: int) -> None:
+        """Discard the last n cache positions (spec-decode rejection)."""
+        slot = self.slots.slot_of[rid]
+        self.slots.pos = self.slots.pos.at[slot].add(-n_tokens)

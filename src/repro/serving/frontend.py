@@ -1,0 +1,144 @@
+"""Serving frontend: the request-facing layer around (scheduler, engine).
+
+Owns the Algorithm-1 control loop for a single replica: queueing arrivals,
+invoking the planner, executing planned batches on the engine, streaming
+tokens to per-request callbacks, and SLO bookkeeping.  launch/serve.py and
+examples/serve_e2e.py are thin wrappers over this class; a network server
+would wrap ``submit`` / ``step`` with its transport of choice.
+
+Time is virtual (the planner's §3.1.1 perf model) so the control plane is
+deterministic and testable; the engine executes every token for real.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.request import Request, RequestState
+from repro.core.scheduler import SchedulerConfig, SLOsServeScheduler
+from repro.core.slo import StageKind
+from repro.serving.engine import ServingEngine
+
+
+@dataclasses.dataclass
+class FrontendStats:
+    submitted: int = 0
+    served: int = 0
+    attained: int = 0
+    dropped: int = 0
+    tokens_out: int = 0
+
+
+class ServingFrontend:
+    def __init__(self, engine: ServingEngine, scheduler: SLOsServeScheduler,
+                 max_decline_retries: int = 3, seed: int = 0):
+        self.engine = engine
+        self.sched = scheduler
+        self.max_retries = max_decline_retries
+        self.rng = np.random.default_rng(seed)
+        self.clock = 0.0
+        self.new_q: list[Request] = []
+        self.running: list[Request] = []
+        self.streams: dict[int, Callable] = {}
+        self.prompts: dict[int, list] = {}
+        self.stats = FrontendStats()
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request, prompt: Optional[list] = None,
+               on_token: Optional[Callable] = None,
+               enc_states=None) -> None:
+        """Queue a request; ``on_token(rid, [tokens])`` streams output."""
+        if prompt is None:
+            prompt = self.rng.integers(
+                1, self.engine.cfg.vocab, req.stages[0].length).tolist()
+        self.prompts[req.rid] = prompt
+        if on_token:
+            self.streams[req.rid] = on_token
+        req._enc = enc_states
+        self.new_q.append(req)
+        self.stats.submitted += 1
+
+    @property
+    def idle(self) -> bool:
+        return not (self.new_q or self.running)
+
+    # ------------------------------------------------------------------ #
+    def step(self, max_batches: int = 8) -> int:
+        """One scheduler invocation + up to ``max_batches`` engine batches.
+        Returns the number of batches executed."""
+        now = self.clock
+        arrivals = [r for r in self.new_q if r.arrival <= now]
+        self.new_q = [r for r in self.new_q if r.arrival > now]
+        mem_free = (self.engine.pages.total_pages
+                    - self.engine.pages.used_pages)
+        res = self.sched.plan(now, self.running, arrivals, mem_free)
+        for r in res.admitted:
+            r.state = RequestState.RUNNING
+            self.running.append(r)
+            self.engine.add_request(r.rid, self.prompts[r.rid],
+                                    r.total_tokens() + 8,
+                                    enc_states=getattr(r, "_enc", None))
+        for r in res.deferred:
+            self.new_q.append(r)
+        for r in res.declined:
+            r.routing_hops += 1
+            if r.routing_hops <= self.max_retries:
+                self.new_q.append(r)
+            else:
+                self.stats.dropped += 1
+                self.stats.served += 1
+        if not res.batches:
+            nxt = min((r.arrival for r in self.new_q),
+                      default=now + 0.1)
+            self.clock = max(now + 0.05, nxt)
+            return 0
+
+        n_exec = 0
+        by_rid = {r.rid: r for r in self.running}
+        for b in res.batches[:max_batches]:
+            out = self.engine.execute(b)
+            self.clock += max(b.est_duration, 1e-3)
+            n_exec += 1
+            for e in b.entries:               # prefill progress = chunks
+                r = by_rid.get(e.rid)
+                if r is not None and e.kind == StageKind.PREFILL \
+                        and r.in_prefill:
+                    r.advance(min(e.n_tokens, r.remaining_in_stage),
+                              self.clock)
+            for rid, toks in out.items():
+                self.stats.tokens_out += len(toks)
+                if toks and rid in self.streams:
+                    self.streams[rid](rid, toks)
+                r = by_rid.get(rid)
+                if r is not None:
+                    r.advance(len(toks), self.clock)
+            for r in list(self.running):
+                if r.finished:
+                    self._finish(r)
+                    by_rid.pop(r.rid, None)
+                elif r.in_prefill and r.rid in self.engine.reqs \
+                        and not self.engine.reqs[r.rid].pending:
+                    need = r.remaining_in_stage   # tool loop: new context
+                    if need > 0:
+                        self.engine.reqs[r.rid].pending.extend(
+                            self.rng.integers(1, self.engine.cfg.vocab,
+                                              need).tolist())
+        return n_exec
+
+    def _finish(self, r: Request) -> None:
+        self.engine.finish(r.rid)
+        self.running.remove(r)
+        self.stats.served += 1
+        self.stats.attained += r.slo_attained(self.sched.zero_load_time)
+        self.streams.pop(r.rid, None)
+        self.prompts.pop(r.rid, None)
+
+    # ------------------------------------------------------------------ #
+    def run_until_idle(self, max_steps: int = 10_000) -> FrontendStats:
+        for _ in range(max_steps):
+            if self.idle:
+                break
+            self.step()
+        return self.stats

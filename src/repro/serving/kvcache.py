@@ -1,0 +1,125 @@
+"""KV-cache memory management: page accounting + slot-based model caches.
+
+``PageAllocator`` implements PagedAttention-style logical page bookkeeping
+(allocation, per-request page tables, preemption-free) used by the engine
+for admission and by the best-effort tier for preemption accounting.
+
+Physical storage on the execution path is slot-contiguous — each active
+request owns one slot of a fixed (max_slots, max_len) cache pytree; the
+block-table gather layout for TPU lives in kernels/paged_attention.py
+(validated against the same reference).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_cache
+
+
+class PageAllocator:
+    def __init__(self, total_pages: int, page_size: int = 16):
+        self.total_pages = total_pages
+        self.page_size = page_size
+        self.free = list(range(total_pages - 1, -1, -1))
+        self.tables: dict[int, list[int]] = {}
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return max(1, math.ceil(n_tokens / self.page_size))
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        return self.pages_needed(n_tokens) <= len(self.free)
+
+    def allocate(self, rid: int, n_tokens: int) -> Optional[list[int]]:
+        need = self.pages_needed(n_tokens)
+        if need > len(self.free):
+            return None
+        pages = [self.free.pop() for _ in range(need)]
+        self.tables.setdefault(rid, []).extend(pages)
+        return pages
+
+    def extend(self, rid: int, new_total_tokens: int) -> bool:
+        have = len(self.tables.get(rid, []))
+        need = self.pages_needed(new_total_tokens)
+        if need <= have:
+            return True
+        extra = need - have
+        if extra > len(self.free):
+            return False
+        self.tables.setdefault(rid, []).extend(
+            self.free.pop() for _ in range(extra))
+        return True
+
+    def release(self, rid: int) -> int:
+        pages = self.tables.pop(rid, [])
+        self.free.extend(reversed(pages))
+        return len(pages)
+
+    @property
+    def used_pages(self) -> int:
+        return self.total_pages - len(self.free)
+
+
+def slot_axes(cfg: ModelConfig, cache) -> list:
+    """Pytree of ints (aligned with the cache) giving each leaf's slot axis:
+    stacked segments are (n_layers, slots, ...) -> 1, single -> 0."""
+    axes = []
+    for seg_cache, (kind, n) in zip(cache, cfg.segments()):
+        ax = 1 if n > 1 else 0
+        axes.append(jax.tree.map(lambda _: ax, seg_cache))
+    return axes
+
+
+@dataclasses.dataclass
+class SlotCache:
+    """Fixed-capacity batched model cache; one slot per active request."""
+    cfg: ModelConfig
+    max_slots: int
+    max_len: int
+    cache: list                       # model cache pytree
+    axes: list                        # per-leaf slot axis (0 or 1)
+    pos: jnp.ndarray                  # (max_slots,) tokens written per slot
+    free_slots: list[int] = dataclasses.field(default_factory=list)
+    slot_of: dict[int, int] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def create(cls, cfg: ModelConfig, max_slots: int, max_len: int,
+               dtype=jnp.float32) -> "SlotCache":
+        cache = init_cache(cfg, max_slots, max_len, dtype)
+        return cls(cfg=cfg, max_slots=max_slots, max_len=max_len,
+                   cache=cache, axes=slot_axes(cfg, cache),
+                   pos=jnp.zeros((max_slots,), jnp.int32),
+                   free_slots=list(range(max_slots - 1, -1, -1)))
+
+    def acquire(self, rid: int) -> Optional[int]:
+        if rid in self.slot_of:
+            return self.slot_of[rid]
+        if not self.free_slots:
+            return None
+        s = self.free_slots.pop()
+        self.slot_of[rid] = s
+        self.pos = self.pos.at[s].set(0)
+        return s
+
+    def release(self, rid: int) -> None:
+        s = self.slot_of.pop(rid, None)
+        if s is not None:
+            self.free_slots.append(s)
+
+    def gather(self, slots: list[int]):
+        idx = jnp.asarray(slots, jnp.int32)
+        return jax.tree.map(lambda c, ax: jnp.take(c, idx, axis=ax),
+                            self.cache, self.axes)
+
+    def scatter(self, slots: list[int], sub_cache) -> None:
+        idx = jnp.asarray(slots, jnp.int32)
+
+        def put(c, s, ax):
+            return c.at[idx].set(s) if ax == 0 else c.at[:, idx].set(s)
+
+        self.cache = jax.tree.map(put, self.cache, sub_cache, self.axes)

@@ -1,0 +1,18 @@
+"""Token sampling: greedy / temperature / top-k."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits, key=None, temperature: float = 0.0, top_k: int = 0):
+    """logits: (..., V) -> token ids (...,)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        v, _ = jax.lax.top_k(logits, top_k)
+        cutoff = v[..., -1:]
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    assert key is not None, "stochastic sampling needs a PRNG key"
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,114 @@
+"""Speculative decoding executor: draft autoregression + target verify.
+
+Greedy-acceptance speculative decoding (Leviathan et al.; temperature-0
+case): the draft model proposes ``sl`` tokens, the target verifies all of
+them in ONE batched forward (the extra batching opportunity §2.2 exploits),
+the accepted prefix plus one corrected/bonus token is emitted, and both
+caches are rolled back to the validated context.
+
+Cache invariant shared with the engine: a cache holds embeddings of
+``(prompt + generated)[:-1]`` and the next model input is the last token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import logits_fn, model_forward
+from repro.serving.kvcache import SlotCache
+
+
+class SpecDecoder:
+    def __init__(self, engine, draft_cfg: ModelConfig, draft_params):
+        self.engine = engine
+        self.cfg = draft_cfg
+        self.params = draft_params
+        self.slots = SlotCache.create(draft_cfg, engine.ecfg.max_slots,
+                                      engine.ecfg.max_len, engine.ecfg.dtype)
+        self._fwd = jax.jit(self._forward)
+
+    def _forward(self, params, tokens, cache, pos0):
+        h, cache, _ = model_forward(params, self.cfg, tokens, cache=cache,
+                                    pos0=pos0)
+        return logits_fn(params, self.cfg, h), cache
+
+    # ------------------------------------------------------------------ #
+    def _seq(self, rid: int) -> list:
+        ctx = self.engine.reqs[rid]
+        return list(ctx.prompt) + list(ctx.generated)
+
+    def _draft_run(self, rid: int, tokens: list) -> jnp.ndarray:
+        """Feed ``tokens`` through the draft at its current position."""
+        slot = self.slots.slot_of[rid]
+        from repro.serving.engine import _bucket
+        L = len(tokens)
+        Lp = _bucket(L)
+        buf = np.zeros((1, Lp), np.int32)
+        buf[0, :L] = tokens
+        pos0 = self.slots.pos[slot][None]
+        sub = self.slots.gather([slot])
+        logits, sub = self._fwd(self.params, jnp.asarray(buf), sub, pos0)
+        self.slots.scatter([slot], sub)
+        self.slots.pos = self.slots.pos.at[slot].add(L)
+        return logits[0, L - 1]
+
+    # ------------------------------------------------------------------ #
+    def decode(self, rid: int, n_tokens: int) -> list:
+        """One verify cycle processing ``n_tokens`` target tokens
+        (= sl drafts + 1); returns the emitted tokens."""
+        eng = self.engine
+        sl = max(n_tokens - 1, 0)
+        if sl == 0:
+            return list(eng._decode_batched([rid], 1)[rid])
+        if self.slots.acquire(rid) is None:
+            return list(eng._decode_batched([rid], n_tokens)[rid])
+        seq = self._seq(rid)
+        dpos = int(self.slots.pos[self.slots.slot_of[rid]])
+        # sync the draft cache up to seq[:-1]
+        if dpos < len(seq) - 1:
+            self._draft_run(rid, seq[dpos:len(seq) - 1])
+
+        # draft sl tokens autoregressively
+        drafts = []
+        cur = seq[-1]
+        for _ in range(sl):
+            logits = self._draft_run(rid, [cur])
+            cur = int(jnp.argmax(logits))
+            drafts.append(cur)
+
+        # target verifies [last, drafts[:-1]] + drafts[-1] in one pass
+        verify_in = [seq[-1]] + drafts
+        slot = eng.slots.slot_of[rid]
+        from repro.serving.engine import _bucket
+        L = len(verify_in)
+        Lp = _bucket(L)
+        buf = np.zeros((1, Lp), np.int32)
+        buf[0, :L] = verify_in
+        pos0 = eng.slots.pos[slot][None]
+        sub = eng.slots.gather([slot])
+        logits, sub = eng._fwd(eng.params, jnp.asarray(buf), sub, pos0,
+                               eng.reqs[rid].enc_states)
+        eng.slots.scatter([slot], sub)
+        eng.slots.pos = eng.slots.pos.at[slot].add(L)
+        target_toks = np.asarray(jnp.argmax(logits[0, :L], axis=-1))
+
+        accepted = 0
+        while accepted < sl and int(target_toks[accepted]) == drafts[accepted]:
+            accepted += 1
+        emitted = [int(t) for t in target_toks[:accepted + 1]]
+
+        # roll back target cache to the validated context
+        eng.rollback(rid, sl - accepted)
+        # roll back draft cache: valid prefix is seq + emitted[:-1]
+        dslot = self.slots.slot_of[rid]
+        dlen = int(self.slots.pos[dslot])
+        want = len(seq) + len(emitted) - 1
+        if dlen > want:
+            self.slots.pos = self.slots.pos.at[dslot].add(want - dlen)
+        eng.reqs[rid].generated.extend(emitted)
+        return emitted
+
+    def release(self, rid: int) -> None:
+        self.slots.release(rid)

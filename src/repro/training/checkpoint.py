@@ -1,0 +1,53 @@
+"""Checkpointing: flatten pytrees to .npz + JSON tree spec (no orbax)."""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> tuple[dict, Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    return arrays, treedef
+
+
+def save_checkpoint(path: str, step: int, params, opt_state=None) -> str:
+    os.makedirs(path, exist_ok=True)
+    state = {"params": params}
+    if opt_state is not None:
+        state["opt_state"] = opt_state
+    arrays, treedef = _flatten(state)
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz")
+    np.savez(fname, __treedef__=np.frombuffer(
+        str(treedef).encode(), dtype=np.uint8), **arrays)
+    with open(os.path.join(path, "latest"), "w") as f:
+        f.write(str(step))
+    return fname
+
+
+def latest_step(path: str) -> int:
+    marker = os.path.join(path, "latest")
+    if os.path.exists(marker):
+        return int(open(marker).read().strip())
+    steps = [int(m.group(1)) for f in os.listdir(path)
+             if (m := re.match(r"ckpt_(\d+)\.npz", f))]
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {path}")
+    return max(steps)
+
+
+def restore_checkpoint(path: str, template, step: int = None):
+    """Restore into the structure of ``template`` (same treedef)."""
+    step = step if step is not None else latest_step(path)
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz")
+    data = np.load(fname)
+    leaves, treedef = jax.tree.flatten(template)
+    restored = [data[f"leaf_{i}"] for i in range(len(leaves))]
+    for i, (a, b) in enumerate(zip(leaves, restored)):
+        assert a.shape == b.shape, (i, a.shape, b.shape)
+    return jax.tree.unflatten(treedef, restored), step

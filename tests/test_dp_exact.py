@@ -1,0 +1,73 @@
+"""Exact-optimality check: the Pareto-frontier DP must match brute-force
+subset enumeration (the ground-truth optimum) on small random instances."""
+import itertools
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.batch_formation import pb_star_fluid
+from repro.core.dp_scheduler import Candidate, dp_admission
+from repro.core.perf_model import opt_perf_model
+from repro.core.request import simple_request
+
+PERF = opt_perf_model(7e9)
+TIERS = [0.05, 0.1]
+HORIZON = 20.0
+
+
+def subset_feasible(cands, mem_free):
+    """Ground truth: the Fig-5 criterion — cumulative demand below the
+    accumulated budget at every accepted prefill deadline."""
+    if sum(c.m for c in cands) > mem_free:
+        return False
+    acc = sorted(cands, key=lambda c: c.ddl)
+    pb, last = 0.0, 0.0
+    counts = [0] * len(TIERS)
+    for c in acc:
+        gain = pb_star_fluid(c.ddl - last, counts, TIERS, PERF)
+        if gain == -math.inf:
+            return False
+        pb += gain - c.p
+        if pb < -1e-9:
+            return False
+        last = c.ddl
+        if c.tier >= 0:
+            counts[c.tier] += 1
+    tail = pb_star_fluid(max(HORIZON - last, 0.0) + max(TIERS),
+                         counts, TIERS, PERF)
+    return tail != -math.inf
+
+
+def brute_force_value(cands, mem_free):
+    best = 0.0
+    for r in range(len(cands) + 1):
+        for sub in itertools.combinations(cands, r):
+            if subset_feasible(list(sub), mem_free):
+                best = max(best, sum(c.value for c in sub))
+    return best
+
+
+@given(seed=st.integers(0, 100_000), n=st.integers(1, 7),
+       mem=st.integers(10, 600))
+@settings(max_examples=40, deadline=None)
+def test_dp_matches_brute_force(seed, n, mem):
+    rng = np.random.default_rng(seed)
+    cands = []
+    for i in range(n):
+        tier = int(rng.integers(0, 2))
+        tpot = TIERS[tier]
+        req = simple_request(i, 0.0, int(rng.integers(100, 3000)),
+                             int(rng.integers(10, 200)), 5.0, tpot,
+                             value=float(rng.integers(1, 4)))
+        cands.append(Candidate(
+            req=req, ddl=float(rng.uniform(0.05, 3.0)),
+            p=req.stages[0].length, m=int(rng.integers(1, 200)),
+            tier=tier, value=req.value))
+    res = dp_admission(cands, TIERS, [0, 0], mem, PERF, horizon=HORIZON)
+    want = brute_force_value(cands, mem)
+    assert res.best_value == pytest.approx(want, abs=1e-6), (
+        f"DP={res.best_value} brute={want}")
+    # and the DP's own chosen subset must be feasible by the ground truth
+    assert subset_feasible(res.accepted, mem)

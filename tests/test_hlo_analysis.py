@@ -1,0 +1,77 @@
+"""Trip-count-aware HLO parser unit tests on synthetic HLO text."""
+from repro.launch.hlo_analysis import (_parse_op_line, analyze_hlo,
+                                       parse_computations)
+
+SYNTH = """HloModule test
+
+%loop_body.1 (arg: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %arg = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%arg), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %y = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%y), replica_groups={}, to_apply=%add.0
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %out = (s32[], f32[8,16]{1,0}) tuple(%ip, %ar)
+}
+
+%loop_cond.1 (arg.1: (s32[], f32[8,16])) -> pred[] {
+  %arg.1 = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i.1 = s32[] get-tuple-element(%arg.1), index=0
+  %n = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%i.1, %n), direction=LT
+}
+
+%add.0 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main.42 (p0: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,16]{1,0}) tuple(%zero, %p0)
+  %w97 = (s32[], f32[8,16]{1,0}) while(%init), condition=%loop_cond.1, body=%loop_body.1
+  ROOT %res = f32[8,16]{1,0} get-tuple-element(%w97), index=1
+}
+"""
+
+
+def test_parse_op_line_tuple_result():
+    op = _parse_op_line("  %w = (s32[], bf16[4,8]{1,0} /*index=5*/) "
+                        "while(%a), condition=%c, body=%b")
+    assert op is not None
+    assert op.opcode == "while"
+    assert op.attr("condition") == "c"
+    assert op.attr("body") == "b"
+
+
+def test_parse_computations_finds_entry():
+    comps, entry = parse_computations(SYNTH)
+    assert entry == "main.42"
+    assert "loop_body.1" in comps
+    assert any(op.opcode == "while" for op in comps["main.42"])
+
+
+def test_trip_count_multiplies_body():
+    a = analyze_hlo(SYNTH)
+    # dot: 2 * 8*16 * 16 = 4096 flops, x12 trips = 49152 (+ elementwise)
+    assert a["flops"] >= 12 * 4096
+    assert a["flops"] < 13 * 4096 + 12 * 64      # small elementwise slack
+    # all-reduce: 8*16*4 bytes = 512, x12 trips
+    assert a["collective_bytes"] == 12 * 512
+    assert a["collectives"]["all-reduce"]["count"] == 12
+
+
+def test_bytes_exclude_fusion_interiors():
+    text = SYNTH + """
+%fused_inner.1 (fp: f32[128,128]) -> f32[128,128] {
+  %fp = f32[128,128]{1,0} parameter(0)
+  ROOT %big = f32[128,128]{1,0} multiply(%fp, %fp)
+}
+"""
+    # the fused computation is never called from ENTRY, so adding it must
+    # not change entry-rooted byte totals
+    assert analyze_hlo(text)["bytes"] == analyze_hlo(SYNTH)["bytes"]

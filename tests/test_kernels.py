@@ -1,0 +1,146 @@
+"""Per-kernel allclose vs the pure-jnp oracles, swept over shapes/dtypes
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.ref import ref_attention_bh, ref_paged_decode, ref_ssd
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# --------------------------- flash attention ---------------------------- #
+@pytest.mark.parametrize("B,Sq,Sk,H,KV,hd", [
+    (1, 128, 128, 2, 2, 64),
+    (2, 64, 64, 4, 2, 32),      # GQA
+    (1, 256, 256, 2, 1, 64),    # MQA, multi-block
+    (2, 128, 384, 2, 2, 64),    # chunked prefill: q chunk vs longer cache
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, Sq, Sk, H, KV, hd, dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (B, Sq, H, hd), dtype)
+    k = _rand(k2, (B, Sk, KV, hd), dtype)
+    v = _rand(k3, (B, Sk, KV, hd), dtype)
+    q_offset = Sk - Sq                       # q sits at the cache tail
+    out = ops.attention(q, k, v, causal=True, q_offset=q_offset,
+                        block_q=64, block_k=64, interpret=True)
+    kk = jnp.repeat(k, H // KV, axis=2).transpose(0, 2, 1, 3).reshape(
+        B * H, Sk, hd)
+    vv = jnp.repeat(v, H // KV, axis=2).transpose(0, 2, 1, 3).reshape(
+        B * H, Sk, hd)
+    qq = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    want = ref_attention_bh(qq, kk, vv, causal=True, q_offset=q_offset)
+    want = want.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_kv_len_mask():
+    """Garbage beyond kv_len must not leak into the output."""
+    B, S, H, hd = 1, 128, 2, 32
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (B, 16, H, hd), jnp.float32)
+    k = _rand(k2, (B, S, H, hd), jnp.float32)
+    v = _rand(k3, (B, S, H, hd), jnp.float32)
+    kv_len = 48
+    k_dirty = k.at[:, kv_len:].set(1e9)
+    v_dirty = v.at[:, kv_len:].set(1e9)
+    out = ops.attention(q, k_dirty, v_dirty, causal=True,
+                        q_offset=kv_len - 16, kv_len=kv_len, interpret=True)
+    out_clean = ops.attention(q, k, v, causal=True, q_offset=kv_len - 16,
+                              kv_len=kv_len, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_clean),
+                               atol=1e-5)
+
+
+def test_flash_attention_non_multiple_shapes():
+    """Padding path: Sq/Sk not multiples of the block size."""
+    B, Sq, Sk, H, hd = 1, 100, 100, 2, 64
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (B, Sq, H, hd), jnp.float32)
+    k = _rand(k2, (B, Sk, H, hd), jnp.float32)
+    v = _rand(k3, (B, Sk, H, hd), jnp.float32)
+    out = ops.attention(q, k, v, causal=True, kv_len=Sk, block_q=64,
+                        block_k=64, interpret=True)
+    qq = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kk = k.transpose(0, 2, 1, 3).reshape(B * H, Sk, hd)
+    vv = v.transpose(0, 2, 1, 3).reshape(B * H, Sk, hd)
+    want = ref_attention_bh(qq, kk, vv, causal=True).reshape(
+        B, H, Sq, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+# --------------------------- paged attention ---------------------------- #
+@pytest.mark.parametrize("B,H,KV,hd,page,max_pages", [
+    (2, 4, 4, 64, 16, 4),
+    (3, 8, 2, 32, 8, 6),        # GQA 4:1
+    (1, 2, 1, 128, 32, 3),      # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_matches_ref(B, H, KV, hd, page, max_pages, dtype):
+    rng = np.random.default_rng(0)
+    n_pages = B * max_pages + 4
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (B, H, hd), dtype)
+    k_pages = _rand(k2, (n_pages, page, KV, hd), dtype)
+    v_pages = _rand(k3, (n_pages, page, KV, hd), dtype)
+    perm = rng.permutation(n_pages)[:B * max_pages]
+    table = jnp.asarray(perm.reshape(B, max_pages), jnp.int32)
+    seq_lens = jnp.asarray(
+        rng.integers(1, max_pages * page, size=B), jnp.int32)
+    out = ops.paged_attention(q, k_pages, v_pages, table, seq_lens,
+                              interpret=True)
+    want = ref_paged_decode(q, k_pages, v_pages, table, seq_lens)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# -------------------------------- SSD ----------------------------------- #
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 64, 2, 16, 8, 16),
+    (2, 128, 4, 32, 16, 32),
+    (1, 96, 1, 64, 32, 32),     # S not a power of two
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_matches_sequential_ref(B, S, H, P, N, chunk, dtype):
+    k1, k2, k3, k4, k5 = jax.random.split(KEY, 5)
+    xh = _rand(k1, (B, S, H, P), dtype)
+    dt = jax.nn.softplus(_rand(k2, (B, S, H), jnp.float32)) * 0.5
+    A = -jnp.exp(jax.random.normal(k3, (H,)) * 0.3)
+    Bm = _rand(k4, (B, S, N), dtype)
+    Cm = _rand(k5, (B, S, N), dtype)
+    out = ops.ssd(xh, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    want, _ = ref_ssd(xh.astype(jnp.float32), dt, A,
+                      Bm.astype(jnp.float32), Cm.astype(jnp.float32))
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want), atol=tol, rtol=tol)
+
+
+def test_ssd_kernel_matches_model_path():
+    """Kernel agrees with the model's lax.scan SSD (ssm.ssd_chunked)."""
+    from repro.models.ssm import ssd_chunked
+    B, S, H, P, N = 2, 64, 4, 16, 8
+    k1, k2, k3, k4, k5 = jax.random.split(KEY, 5)
+    xh = jax.random.normal(k1, (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(k2, (B, S, H))) * 0.5
+    A = -jnp.exp(jax.random.normal(k3, (H,)) * 0.3)
+    Bm = jax.random.normal(k4, (B, S, N))
+    Cm = jax.random.normal(k5, (B, S, N))
+    out = ops.ssd(xh, dt, A, Bm, Cm, chunk=16, interpret=True)
+    want, _ = ssd_chunked(xh, dt, A, Bm, Cm, chunk=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-3, rtol=1e-3)

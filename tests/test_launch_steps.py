@@ -1,0 +1,63 @@
+"""Launch-layer integration on the host mesh (1 device): build + lower +
+compile each step kind for a reduced config, end-to-end through the same
+code path the 512-device dry-run uses."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_reduced
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import SHAPES, build, shape_supported
+
+SMALL_SHAPES = {
+    "train_4k": dict(seq_len=64, global_batch=4, kind="train"),
+    "prefill_32k": dict(seq_len=128, global_batch=2, kind="prefill"),
+    "decode_32k": dict(seq_len=128, global_batch=4, kind="decode"),
+}
+
+
+@pytest.fixture(autouse=True)
+def shrink_shapes(monkeypatch):
+    import repro.launch.steps as steps
+    monkeypatch.setattr(steps, "SHAPES",
+                        {**steps.SHAPES, **SMALL_SHAPES})
+
+
+@pytest.mark.parametrize("shape", list(SMALL_SHAPES))
+@pytest.mark.parametrize("arch", ["smollm-135m", "deepseek-v2-236b",
+                                  "zamba2-7b"])
+def test_build_lower_compile_host_mesh(arch, shape):
+    cfg = get_reduced(arch)
+    mesh = make_host_mesh()
+    with mesh:
+        fn, args = build(cfg, shape, mesh)
+        compiled = jax.jit(fn).lower(*args).compile()
+    a = analyze_hlo(compiled.as_text())
+    assert a["flops"] > 0
+    assert a["bytes"] > 0
+
+
+def test_shape_supported_logic():
+    assert shape_supported(get_reduced("smollm-135m"), "long_500k")[0] is False
+    assert shape_supported(get_reduced("mamba2-2.7b"), "long_500k")[0] is True
+    assert shape_supported(get_reduced("zamba2-7b"), "long_500k")[0] is True
+    assert shape_supported(get_reduced("qwen3-1.7b-swa"), "long_500k")[0] \
+        is True
+    assert shape_supported(get_reduced("whisper-large-v3"),
+                           "long_500k")[0] is False
+    for arch in ("smollm-135m", "whisper-large-v3"):
+        for shape in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_supported(get_reduced(arch), shape)[0]
+
+
+def test_opt_variant_builds(monkeypatch):
+    cfg = dataclasses.replace(get_reduced("deepseek-v2-236b"),
+                              attn_impl="chunked", mla_absorb=True,
+                              remat=True, attn_chunk=32)
+    mesh = make_host_mesh()
+    with mesh:
+        fn, args = build(cfg, "train_4k", mesh, microbatches=2)
+        compiled = jax.jit(fn).lower(*args).compile()
+    assert compiled is not None

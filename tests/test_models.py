@@ -1,0 +1,179 @@
+"""Model zoo correctness: per-arch incremental-decode consistency,
+MoE dispatch-vs-dense oracle, SSD chunked-vs-recurrent equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_reduced
+from repro.models import (encdec_forward, encoder_forward, init_cache,
+                          init_encdec_params, init_params, logits_fn,
+                          model_forward)
+from repro.models.moe import moe_forward
+from repro.models.ssm import init_ssm, ssd_chunked, ssm_decode_step, ssm_forward
+from repro.models.transformer import init_block
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _exact_cf(cfg):
+    return (float(cfg.moe.n_experts) / cfg.moe.top_k) if cfg.moe else None
+
+
+def _setup(arch, B=2, S=12):
+    cfg = get_reduced(arch)
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    enc = None
+    if cfg.arch_type == "encdec":
+        params = init_encdec_params(KEY, cfg)
+        frames = jax.random.normal(KEY, (B, cfg.encoder.n_frames, cfg.d_model))
+        enc = encoder_forward(params["encoder"], cfg, frames)
+    else:
+        params = init_params(KEY, cfg)
+        if cfg.arch_type == "vlm":
+            enc = jax.random.normal(KEY, (B, cfg.n_image_tokens, cfg.d_model))
+    return cfg, params, toks, enc
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg, params, toks, enc = _setup(arch)
+    h, _, aux = model_forward(params, cfg, toks, enc_states=enc,
+                              moe_cf=_exact_cf(cfg))
+    assert h.shape == (*toks.shape, cfg.d_model)
+    lg = logits_fn(params, cfg, h)
+    assert lg.shape == (*toks.shape, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(lg)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_incremental_decode_matches_full(arch):
+    """Prefill + token-by-token decode must equal the full forward —
+    the core serving-correctness invariant for every cache type."""
+    B, S, PRE = 2, 12, 8
+    cfg, params, toks, enc = _setup(arch, B, S)
+    cf = _exact_cf(cfg)
+    h_full, _, _ = model_forward(params, cfg, toks, enc_states=enc, moe_cf=cf)
+    cache = init_cache(cfg, B, 32)
+    h, cache, _ = model_forward(params, cfg, toks[:, :PRE], cache=cache,
+                                pos0=jnp.zeros((B,), jnp.int32),
+                                enc_states=enc, moe_cf=cf)
+    hs = [h]
+    for t in range(PRE, S):
+        h, cache, _ = model_forward(params, cfg, toks[:, t:t + 1],
+                                    cache=cache,
+                                    pos0=jnp.full((B,), t, jnp.int32),
+                                    enc_states=enc, moe_cf=cf)
+        hs.append(h)
+    np.testing.assert_allclose(np.asarray(h_full),
+                               np.asarray(jnp.concatenate(hs, 1)),
+                               atol=5e-4, rtol=5e-3)
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "deepseek-v2-236b",
+                                  "mamba2-2.7b", "zamba2-7b"])
+def test_chunked_prefill_matches_full(arch):
+    """Two prefill chunks must equal one whole-prompt prefill."""
+    B, S = 2, 16
+    cfg, params, toks, enc = _setup(arch, B, S)
+    cf = _exact_cf(cfg)
+    cache1 = init_cache(cfg, B, 32)
+    h1, _, _ = model_forward(params, cfg, toks, cache=cache1,
+                             pos0=jnp.zeros((B,), jnp.int32),
+                             enc_states=enc, moe_cf=cf)
+    cache2 = init_cache(cfg, B, 32)
+    ha, cache2, _ = model_forward(params, cfg, toks[:, :8], cache=cache2,
+                                  pos0=jnp.zeros((B,), jnp.int32),
+                                  enc_states=enc, moe_cf=cf)
+    hb, _, _ = model_forward(params, cfg, toks[:, 8:], cache=cache2,
+                             pos0=jnp.full((B,), 8, jnp.int32),
+                             enc_states=enc, moe_cf=cf)
+    np.testing.assert_allclose(np.asarray(h1),
+                               np.asarray(jnp.concatenate([ha, hb], 1)),
+                               atol=5e-4, rtol=5e-3)
+
+
+def test_moe_dispatch_matches_dense_oracle():
+    cfg = get_reduced("phi3.5-moe-42b-a6.6b")
+    blk = init_block(KEY, "attn_moe", cfg)
+    x = jax.random.normal(KEY, (2, 8, cfg.d_model))
+    dense, _ = moe_forward(blk["moe"], x, cfg, mode="dense")
+    disp, _ = moe_forward(blk["moe"], x, cfg,
+                          capacity_factor=_exact_cf(cfg))
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(disp),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_moe_capacity_drops_tokens_gracefully():
+    cfg = get_reduced("phi3.5-moe-42b-a6.6b")
+    blk = init_block(KEY, "attn_moe", cfg)
+    x = jax.random.normal(KEY, (2, 32, cfg.d_model))
+    out, aux = moe_forward(blk["moe"], x, cfg, capacity_factor=0.25)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert float(aux["aux_loss"]) > 0
+
+
+def test_ssd_chunk_size_invariance():
+    """Chunked SSD must be invariant to the chunk size (vs chunk=S)."""
+    cfg = get_reduced("mamba2-2.7b")
+    B, S, H, P, N = 2, 32, 4, 16, 8
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    xh = jax.random.normal(k1, (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(k2, (B, S, H)))
+    A = -jnp.exp(jax.random.normal(k3, (H,)) * 0.3)
+    Bm = jax.random.normal(k4, (B, S, N))
+    Cm = jax.random.normal(k1, (B, S, N))
+    y_full, h_full = ssd_chunked(xh, dt, A, Bm, Cm, chunk=S)
+    y8, h8 = ssd_chunked(xh, dt, A, Bm, Cm, chunk=8)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y8),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h_full), np.asarray(h8),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_ssm_prefill_then_decode_matches_full():
+    cfg = get_reduced("mamba2-2.7b")
+    p = init_ssm(KEY, cfg)
+    B, S = 2, 16
+    x = jax.random.normal(KEY, (B, S, cfg.d_model)) * 0.1
+    y_full, _ = ssm_forward(p, x, cfg)
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    cache = {"conv": jnp.zeros((B, s.d_conv - 1, d_in + 2 * s.d_state)),
+             "state": jnp.zeros((B, nheads, s.head_dim, s.d_state))}
+    y_pre, cache = ssm_forward(p, x[:, :8], cfg, cache=cache)
+    ys = [y_pre]
+    for t in range(8, S):
+        y_t, cache = ssm_decode_step(p, x[:, t:t + 1], cfg, cache)
+        ys.append(y_t)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.concatenate(ys, 1)),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_sliding_window_limits_attention():
+    """SWA variant: a token far outside the window has zero influence."""
+    cfg = get_reduced("qwen3-1.7b-swa")
+    assert cfg.sliding_window == 64
+    import dataclasses
+    cfg_small = dataclasses.replace(cfg, sliding_window=4)
+    params = init_params(KEY, cfg_small)
+    toks = jax.random.randint(KEY, (1, 16), 0, cfg.vocab)
+    h1, _, _ = model_forward(params, cfg_small, toks)
+    toks2 = toks.at[0, 0].set((int(toks[0, 0]) + 7) % cfg.vocab)
+    h2, _, _ = model_forward(params, cfg_small, toks2)
+    # position 15 is > window away from position 0 (2 layers * window 4)
+    np.testing.assert_allclose(np.asarray(h1[0, -1]), np.asarray(h2[0, -1]),
+                               atol=1e-5)
+
+
+def test_param_count_matches_init():
+    for arch in ["smollm-135m", "phi3.5-moe-42b-a6.6b", "mamba2-2.7b"]:
+        cfg = get_reduced(arch)
+        params = init_params(KEY, cfg)
+        n_actual = sum(x.size for x in jax.tree.leaves(params)
+                       if hasattr(x, "size"))
+        n_predicted = cfg.param_count()
+        assert abs(n_actual - n_predicted) / n_actual < 0.1, (
+            arch, n_actual, n_predicted)

@@ -1,0 +1,74 @@
+import numpy as np
+import pytest
+
+from repro.core.perf_model import (PerfModel, TPU_V5E, A100_40G,
+                                   opt_perf_model)
+
+
+def test_roofline_terms_positive():
+    pm = opt_perf_model(7e9)
+    assert len(pm.terms) == 2
+    for (k1, k2, b) in pm.terms:
+        assert k1 >= 0 and k2 >= 0 and b >= 0
+
+
+def test_batch_time_monotone_in_tokens():
+    pm = opt_perf_model(13e9)
+    ts = [pm.batch_time(n) for n in (1, 64, 512, 4096)]
+    assert all(a <= b for a, b in zip(ts, ts[1:]))
+
+
+def test_memory_floor_binds_at_small_batch():
+    """Tiny batches are weight-read bound: time ~ constant."""
+    pm = opt_perf_model(30e9)
+    assert pm.batch_time(1) == pytest.approx(pm.batch_time(8), rel=0.05)
+
+
+def test_time2bs_inverts_batch_time():
+    pm = opt_perf_model(7e9)
+    for target in (0.02, 0.05, 0.1, 0.5):
+        bs = pm.time2bs(target)
+        assert pm.batch_time(bs) <= target + 1e-9
+        assert pm.batch_time(bs + 1) > target - 1e-6
+
+
+def test_time2bs_zero_when_infeasible():
+    pm = opt_perf_model(30e9)
+    assert pm.time2bs(1e-6) == 0
+
+
+def test_spec_term_increases_time():
+    pm = opt_perf_model(7e9, spec=True)
+    assert pm.batch_time(256, spec_step=4) > pm.batch_time(256, spec_step=0)
+
+
+def test_fit_recovers_max_affine():
+    true = PerfModel(terms=((1e-4, 0.0, 1e-4), (1e-5, 0.0, 1e-2)))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, 4096, size=400)
+    spec = np.zeros(400)
+    times = np.array([true.batch_time(t) for t in toks])
+    times *= rng.lognormal(0, 0.02, size=400)
+    fit = PerfModel.fit(toks, spec, times)
+    r2 = fit.r_squared(toks, spec, times)
+    assert r2 > 0.95   # paper Fig 10b reports 0.82-0.93 on real hardware
+
+
+def test_tpu_vs_a100_constants():
+    tpu = opt_perf_model(7e9, hw=TPU_V5E)
+    a100 = opt_perf_model(7e9, hw=A100_40G)
+    # A100 has more FLOPs and bandwidth: faster at both ends
+    assert tpu.batch_time(2048) > a100.batch_time(2048)
+    assert tpu.batch_time(1) > a100.batch_time(1)
+
+
+def test_context_aware_kv_term_beyond_paper():
+    """Beyond-paper k3 term: long-context decode batches are KV-bandwidth
+    bound; the paper's model (k3=0) underestimates their latency."""
+    import dataclasses
+    base = opt_perf_model(7e9)
+    ctx = dataclasses.replace(base, k3_kv=1.0 / 1.24e12)  # 1/HBM_bw
+    kv = 32768 * 524288   # bytes of KV read for a long-context batch
+    assert ctx.batch_time(64, kv_bytes=kv) > base.batch_time(64)
+    # and the inverse respects it
+    assert ctx.time2bs(0.05, kv_bytes=kv) <= base.time2bs(0.05)

@@ -1,0 +1,153 @@
+"""Property-based tests (hypothesis) for the planner's invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.batch_formation import (DecodeDemand, form_batches,
+                                        pb_star_fluid)
+from repro.core.dp_scheduler import Candidate, dp_admission
+from repro.core.perf_model import PerfModel, opt_perf_model
+from repro.core.request import simple_request
+from repro.core.slo import StageKind
+from repro.core.spec_planner import acc_len
+from repro.serving.kvcache import PageAllocator
+
+PERF = opt_perf_model(7e9)
+
+perf_models = st.builds(
+    lambda k1, b2: PerfModel(terms=((k1, 0.0, 2e-4), (k1 / 10, 0.0, b2))),
+    k1=st.floats(1e-5, 1e-3), b2=st.floats(1e-3, 5e-2))
+
+
+@given(pm=perf_models, t=st.floats(1e-3, 2.0))
+@settings(max_examples=60, deadline=None)
+def test_time2bs_is_inverse_of_batch_time(pm, t):
+    bs = pm.time2bs(t)
+    if bs > 0:
+        assert pm.batch_time(bs) <= t + 1e-9
+    assert pm.batch_time(bs + 1) > t - 1e-9
+
+
+@given(pm=perf_models, n=st.integers(1, 500))
+@settings(max_examples=60, deadline=None)
+def test_batch_time_monotone(pm, n):
+    assert pm.batch_time(n) <= pm.batch_time(n + 17)
+
+
+@given(t=st.floats(0.1, 5.0), counts=st.lists(st.integers(0, 40),
+                                              min_size=1, max_size=3))
+@settings(max_examples=60, deadline=None)
+def test_pb_star_decreasing_in_demand(t, counts):
+    """More decode demand never yields more budget — up to one batch of
+    slack: pb* truncates the horizon to whole batches of length t0 = the
+    tightest ACTIVE tier, so adding a tighter-tier request can shrink t0
+    and recover (at most) the previously-truncated remainder."""
+    tiers = [0.05, 0.08, 0.12][:len(counts)]
+    a = pb_star_fluid(t, counts, tiers, PERF)
+    heavier = [c + 1 for c in counts]
+    b = pb_star_fluid(t, heavier, tiers, PERF)
+    one_batch_slack = PERF.time2bs(max(tiers))
+    assert b <= a + one_batch_slack + 1e-6
+
+
+@given(t=st.floats(0.1, 2.0), extra=st.floats(0.05, 2.0),
+       n=st.integers(0, 30))
+@settings(max_examples=60, deadline=None)
+def test_pb_star_monotone_in_time(t, extra, n):
+    a = pb_star_fluid(t, [n], [0.06], PERF)
+    b = pb_star_fluid(t + extra, [n], [0.06], PERF)
+    if a == -math.inf:
+        assert b == -math.inf
+    else:
+        assert b >= a - 1e-6
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 12))
+@settings(max_examples=40, deadline=None)
+def test_form_batches_meets_deadlines_or_reports_infeasible(seed, n):
+    rng = np.random.default_rng(seed)
+    demands = [DecodeDemand(i, float(rng.choice([0.05, 0.1, 0.2])),
+                            remaining=int(rng.integers(1, 40)))
+               for i in range(n)]
+    horizon = float(rng.uniform(0.3, 1.5))
+    batches, ok = form_batches(horizon, demands, PERF)
+    if not ok:
+        return
+    got = {d.rid: 0 for d in demands}
+    t = 0.0
+    for b in batches:
+        t += b.est_duration
+        for e in b.entries:
+            assert e.kind == StageKind.DECODE
+            got[e.rid] += e.n_tokens
+        for d in demands:
+            need = min(math.floor(t / d.tpot + 1e-9), d.remaining)
+            assert got[d.rid] >= need
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 8),
+       mem=st.integers(1, 400))
+@settings(max_examples=40, deadline=None)
+def test_dp_admission_invariants(seed, n, mem):
+    rng = np.random.default_rng(seed)
+    cands = []
+    for i in range(n):
+        req = simple_request(i, 0.0, int(rng.integers(50, 2000)),
+                             int(rng.integers(10, 300)), 5.0, 0.1)
+        cands.append(Candidate(
+            req=req, ddl=float(rng.uniform(0.05, 5.0)),
+            p=req.stages[0].length,
+            m=int(rng.integers(1, 80)), tier=0))
+    res = dp_admission(cands, [0.1], [0], mem, PERF, horizon=20.0)
+    # 1. partition: every candidate is either accepted or declined
+    assert len(res.accepted) + len(res.declined) == n
+    # 2. memory constraint holds
+    assert sum(c.m for c in res.accepted) <= mem
+    # 3. accepted set is budget-feasible: prefix sums of demand within
+    #    accumulated budget at every deadline
+    acc = sorted(res.accepted, key=lambda c: c.ddl)
+    pb, last, nk = 0.0, 0.0, 0
+    for c in acc:
+        pb += pb_star_fluid(c.ddl - last, [nk], [0.1], PERF)
+        pb -= c.p
+        assert pb >= -1e-6, "admitted request exceeds token budget"
+        last = c.ddl
+        nk += 1
+    # 4. value never increased by also declining an accepted candidate
+    assert res.best_value == pytest.approx(
+        sum(c.value for c in res.accepted), abs=1e-6)
+
+
+@given(sl=st.integers(0, 10), alpha=st.floats(0.0, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_acc_len_bounds_property(sl, alpha):
+    a = acc_len(sl, alpha)
+    assert 1.0 - 1e-9 <= a <= sl + 1 + 1e-9
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_page_allocator_conservation(seed):
+    rng = np.random.default_rng(seed)
+    pa = PageAllocator(total_pages=64, page_size=16)
+    live = {}
+    for op in range(60):
+        if live and rng.random() < 0.4:
+            rid = int(rng.choice(list(live)))
+            pa.release(rid)
+            del live[rid]
+        else:
+            rid = 1000 + op
+            toks = int(rng.integers(1, 300))
+            pages = pa.allocate(rid, toks)
+            if pages is not None:
+                live[rid] = pages
+        used = sum(len(v) for v in live.values())
+        assert pa.used_pages == used
+        all_pages = [p for v in live.values() for p in v]
+        assert len(all_pages) == len(set(all_pages)), "double allocation"
+    for rid in list(live):
+        pa.release(rid)
+    assert pa.used_pages == 0

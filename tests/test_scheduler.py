@@ -1,0 +1,147 @@
+"""Scheduler unit tests, including the paper's Fig. 3 toy example."""
+import math
+
+import pytest
+
+from repro.core.batch_formation import (DecodeDemand, form_batches,
+                                        pb_star_fluid)
+from repro.core.dp_scheduler import Candidate, dp_admission
+from repro.core.perf_model import PerfModel, opt_perf_model
+from repro.core.request import Request, simple_request
+from repro.core.scheduler import SLOsServeScheduler, SchedulerConfig
+from repro.core.slo import StageKind
+
+
+# A linear toy perf model: 6 tokens per time unit, no overhead (Fig. 3).
+TOY = PerfModel(terms=((1.0 / 6.0, 0.0, 0.0),))
+
+
+def toy_request(rid, prompt, output, ttft_abs, tpot):
+    """Request with an absolute TTFT budget expressed through slowdown."""
+    zero_load = TOY.batch_time(prompt)
+    return simple_request(rid, 0.0, prompt, output,
+                          ttft_slowdown=ttft_abs / zero_load, tpot=tpot)
+
+
+def test_fig3_example():
+    """Paper Fig. 3: capacity 6 tok/unit; 3 ongoing decodes (TPOT=1);
+    burst of 4 requests, each 6 prefill tokens, TTFT deadline = 6 units.
+    Greedy schedulers violate SLOs; SLOs-Serve attains all 3 decodes and
+    3 of the 4 new requests."""
+    sched = SLOsServeScheduler(TOY, SchedulerConfig(horizon=40.0))
+    running = []
+    for i in range(3):
+        r = simple_request(100 + i, 0.0, prompt=6, output=30,
+                           ttft_slowdown=6.0, tpot=1.0)
+        r.state = type(r.state).RUNNING
+        r.advance(6, 0.0)          # prefill done: now decoding
+        running.append(r)
+    new = [toy_request(i, 6, 30, ttft_abs=6.0, tpot=1.0) for i in range(4)]
+    res = sched.plan(0.0, running, new, mem_free=10_000)
+    # Each time unit: 6 tokens; 3 go to decodes, 3 left for prefill.
+    # 6-token prefill needs 2 units of leftover → 3 of 4 admissible by t=6.
+    assert len(res.admitted) == 3
+    assert len(res.declined) == 1
+
+
+def test_pb_star_fluid_matches_form_batches():
+    perf = opt_perf_model(7e9)
+    demands = [DecodeDemand(i, 0.05) for i in range(10)]
+    batches, ok = form_batches(1.0, demands, perf)
+    assert ok
+    total_pb = sum(b.prefill_budget for b in batches)
+    fluid = pb_star_fluid(1.0, [10], [0.05], perf)
+    assert total_pb == pytest.approx(fluid, rel=0.05)
+
+
+def test_form_batches_meets_every_decode_deadline():
+    perf = opt_perf_model(7e9)
+    demands = [DecodeDemand(0, 0.05), DecodeDemand(1, 0.10),
+               DecodeDemand(2, 0.10)]
+    batches, ok = form_batches(1.0, demands, perf)
+    assert ok
+    # token k of request r must appear by batch ending at k*tpot
+    got = {0: 0, 1: 0, 2: 0}
+    t = 0.0
+    for b in batches:
+        t += b.est_duration
+        for e in b.entries:
+            got[e.rid] += e.n_tokens
+        for d in demands:
+            need = math.floor(t / d.tpot + 1e-9)
+            assert got[d.rid] >= need, (t, d.rid, got[d.rid], need)
+
+
+def test_form_batches_infeasible_when_overloaded():
+    tiny = PerfModel(terms=((1.0, 0.0, 0.0),))   # 1 token/s
+    demands = [DecodeDemand(i, 0.5) for i in range(10)]  # needs 20 tok/s
+    _, ok = form_batches(2.0, demands, tiny)
+    assert not ok
+    assert pb_star_fluid(2.0, [10], [0.5], tiny) == -math.inf
+
+
+def test_dynamic_batch_size_beats_fixed():
+    """Dynamic tuning (Algorithm 2) yields at least the budget of a fixed
+    tightest-SLO cap (Sarathi) for mixed-tier decode sets."""
+    perf = opt_perf_model(7e9)
+    tiers = [0.05, 0.1]
+    counts = [2, 20]
+    fluid = pb_star_fluid(1.0, counts, tiers, perf)
+    # Sarathi: every batch capped at tightest TPOT budget, decodes 1 token
+    # per request per batch regardless of tier.
+    cap = perf.time2bs(0.05)
+    sarathi_pb = (cap - sum(counts)) * (1.0 / 0.05)
+    assert fluid >= sarathi_pb
+
+
+def test_dp_declines_when_memory_short():
+    perf = opt_perf_model(7e9)
+    cands = [Candidate(req=simple_request(i, 0.0, 100, 50, 5.0, 0.1),
+                       ddl=1.0 + 0.1 * i, p=100, m=60, tier=0)
+             for i in range(4)]
+    res = dp_admission(cands, [0.1], [0], mem_free=120, perf=perf,
+                       horizon=10.0)
+    assert len(res.accepted) == 2      # only two fit in memory
+    assert len(res.declined) == 2
+
+
+def test_dp_forced_requests_always_kept():
+    perf = opt_perf_model(7e9)
+    forced = Candidate(req=simple_request(0, 0.0, 20000, 50, 5.0, 0.1),
+                       ddl=0.001, p=20000, m=0, tier=0, forced=True)
+    res = dp_admission([forced], [0.1], [0], mem_free=1000, perf=perf,
+                       horizon=10.0)
+    assert res.relaxed                 # impossible deadline → relaxed
+    assert forced in res.accepted
+
+
+def test_dp_prefers_more_admissions():
+    perf = opt_perf_model(7e9)
+    # generous deadlines: everything fits
+    cands = [Candidate(req=simple_request(i, 0.0, 200, 50, 5.0, 0.1),
+                       ddl=5.0 + i, p=200, m=10, tier=0) for i in range(6)]
+    res = dp_admission(cands, [0.1], [0], mem_free=10_000, perf=perf,
+                       horizon=30.0)
+    assert len(res.accepted) == 6
+
+
+def test_plan_admits_all_at_low_load():
+    perf = opt_perf_model(7e9)
+    sched = SLOsServeScheduler(perf)
+    new = [simple_request(i, 0.0, 500, 100, 5.0, 0.1) for i in range(3)]
+    res = sched.plan(0.0, [], new, mem_free=100_000)
+    assert len(res.admitted) == 3
+    assert not res.declined
+    assert res.batches
+    # every admitted prompt token is scheduled somewhere
+    sched_prefill = sum(e.n_tokens for b in res.batches for e in b.entries
+                        if e.kind == StageKind.PREFILL)
+    assert sched_prefill == 1500
+
+
+def test_plan_defers_over_cap():
+    perf = opt_perf_model(7e9)
+    sched = SLOsServeScheduler(perf, SchedulerConfig(max_new_per_plan=4))
+    new = [simple_request(i, 0.0, 500, 100, 5.0, 0.1) for i in range(10)]
+    res = sched.plan(0.0, [], new, mem_free=100_000)
+    assert len(res.deferred) == 6

@@ -1,0 +1,60 @@
+"""Sharding-rule unit tests (AbstractMesh: no devices needed)."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.sharding import _fit, batch_spec, param_spec
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+POD_MESH = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_fit_drops_indivisible_axes():
+    assert _fit("model", 9, MESH) is None           # smollm heads
+    assert _fit("model", 32, MESH) == "model"
+    assert _fit(("pod", "data"), 256, POD_MESH) == ("pod", "data")
+    assert _fit(("pod", "data"), 16, POD_MESH) == "data"  # falls back
+
+
+def test_param_spec_attention():
+    spec = param_spec("segments/0/p/attn/wq", (4096, 32, 128), MESH,
+                      stacked=False)
+    assert spec == P("data", "model", None)
+    # stacked segments get a leading None for the layer axis
+    spec = param_spec("segments/0/p/attn/wq", (32, 4096, 32, 128), MESH,
+                      stacked=True)
+    assert spec == P(None, "data", "model", None)
+
+
+def test_param_spec_tp_mode_removes_data():
+    spec = param_spec("segments/0/p/attn/wq", (4096, 32, 128), MESH,
+                      stacked=False, mode="tp")
+    assert spec == P(None, "model", None)
+    spec = param_spec("segments/0/p/mlp/w_up", (4096, 14336), MESH,
+                      stacked=False, mode="tp")
+    assert spec == P(None, "model")
+
+
+def test_param_spec_moe_expert_parallel():
+    spec = param_spec("segments/1/p/moe/w_gate", (160, 5120, 1536), MESH,
+                      stacked=False)
+    assert spec == P("model", "data", None)
+
+
+def test_param_spec_norms_replicated():
+    assert param_spec("segments/0/p/norm1/scale", (4096,), MESH,
+                      stacked=False) == P()
+
+
+def test_param_spec_indivisible_heads_dropped():
+    # smollm: 9 heads % 16 != 0 -> head axis replicated
+    spec = param_spec("segments/0/p/attn/wq", (576, 9, 64), MESH,
+                      stacked=False)
+    assert spec == P("data", None, None)
+
+
+def test_batch_spec():
+    assert batch_spec(MESH, 256) == P("data", None)
+    assert batch_spec(MESH, 1) == P(None, None)          # long_500k
+    assert batch_spec(POD_MESH, 256) == P(("pod", "data"), None)

@@ -1,0 +1,131 @@
+"""Simulator + baselines + workloads + best-effort tier behaviour."""
+import numpy as np
+import pytest
+
+from repro.core import opt_perf_model, SimConfig
+from repro.core.admission import BestEffortQueue
+from repro.core.request import Request, RequestState, simple_request
+from repro.core.router import make_baseline_cluster, make_slos_serve_cluster
+from repro.core.slo import StageKind
+from repro.core.workload import (SCENARIOS, TABLE4, generate_workload,
+                                 bursty_arrivals, poisson_arrivals)
+
+PERF = opt_perf_model(7e9)
+
+
+# ----------------------------- workloads ------------------------------ #
+def test_workload_stats_match_table4():
+    rng = np.random.default_rng(0)
+    d = TABLE4["chatbot"]["prompt"]
+    samples = d.sample(rng, 4000)
+    assert np.mean(samples) == pytest.approx(763, rel=0.1)
+    assert np.std(samples) == pytest.approx(424, rel=0.2)
+
+
+def test_arrival_rates():
+    rng = np.random.default_rng(0)
+    a = poisson_arrivals(5.0, 200.0, rng)
+    assert len(a) == pytest.approx(1000, rel=0.15)
+    b = bursty_arrivals(5.0, 200.0, rng)
+    assert len(b) == pytest.approx(1000, rel=0.2)
+
+
+def test_bursty_is_burstier():
+    rng = np.random.default_rng(1)
+    a = poisson_arrivals(5.0, 300.0, rng)
+    b = bursty_arrivals(5.0, 300.0, rng)
+    def cv(x):
+        gaps = np.diff(x)
+        return np.std(gaps) / np.mean(gaps)
+    assert cv(b) > cv(a) * 1.2
+
+
+def test_all_scenarios_generate():
+    for name in SCENARIOS:
+        reqs = generate_workload(name, 2.0, 10.0, seed=1)
+        assert all(r.stages for r in reqs)
+        if name == "toolllm":
+            assert any(len(r.stages) > 2 for r in reqs)
+        if name == "reasoning":
+            assert all(len(r.stages) == 3 for r in reqs)
+
+
+# ----------------------------- simulator ------------------------------ #
+def test_low_load_full_attainment():
+    sim = make_slos_serve_cluster(1, PERF)
+    res = sim.run(generate_workload("chatbot", 0.5, 20.0, 0))
+    assert res.attainment >= 0.95
+    assert res.n_finished == res.n_requests
+
+
+def test_overload_degrades_but_some_attain():
+    sim = make_slos_serve_cluster(1, PERF)
+    res = sim.run(generate_workload("chatbot", 20.0, 10.0, 0))
+    assert res.attainment < 0.9
+    assert res.n_attained > 0      # soft admission saves a subset
+
+
+def test_ours_beats_baselines_at_high_load():
+    rate = 9.0
+    reqs = lambda: generate_workload("chatbot", rate, 30.0, 0)
+    ours = make_slos_serve_cluster(1, PERF).run(reqs()).attainment
+    vllm = make_baseline_cluster("vllm", 1, PERF).run(reqs()).attainment
+    sarathi = make_baseline_cluster("sarathi", 1, PERF).run(reqs()).attainment
+    assert ours > vllm
+    assert ours > sarathi
+
+
+def test_multi_replica_routing():
+    # load near per-replica capacity so some arrivals are declined and
+    # the SLO-driven sequential routing (§4.2) actually engages
+    sim = make_slos_serve_cluster(4, PERF)
+    res = sim.run(generate_workload("chatbot", 40.0, 15.0, 0))
+    assert res.attainment >= 0.5
+    assert any(r.hops > 0 for r in res.records)   # routing actually used
+    # and routing must not be a loophole: moderate load stays attained
+    sim2 = make_slos_serve_cluster(4, PERF)
+    res2 = sim2.run(generate_workload("chatbot", 12.0, 15.0, 0))
+    assert res2.attainment >= 0.9
+
+
+def test_distserve_runs():
+    sim = make_baseline_cluster("distserve", 2, PERF, prefill_ratio=(1, 1))
+    res = sim.run(generate_workload("chatbot", 1.0, 20.0, 0))
+    assert res.n_finished == res.n_requests
+
+
+def test_scheduler_overhead_under_10ms():
+    """Paper Fig. 15: planning calls stay below ~10 ms."""
+    sim = make_slos_serve_cluster(1, PERF)
+    res = sim.run(generate_workload("chatbot", 6.0, 20.0, 0))
+    assert np.percentile(res.sched_overheads, 99) < 0.050
+    assert np.median(res.sched_overheads) < 0.010
+
+
+# --------------------------- best-effort tier -------------------------- #
+def test_best_effort_queue_preemption_keeps_tokens():
+    q = BestEffortQueue(page_size=16)
+    r = simple_request(0, 0.0, prompt=64, output=32, ttft_slowdown=5.0,
+                       tpot=0.1)
+    q.add(r)
+    used, fin = q.consume_budget(80, now=1.0, free_pages=100)
+    assert used == 64 + 16          # full prefill + 16 decode tokens
+    assert not fin
+    freed = q.preempt_for_pages(1)
+    assert freed > 0
+    assert r.state == RequestState.PREEMPTED
+    # resume: recompute prefill covers prompt + generated tokens
+    used2, fin2 = q.consume_budget(10_000, now=2.0, free_pages=100)
+    assert fin2 and fin2[0].rid == 0
+    assert used2 >= (64 + 16) + (32 - 16)
+
+
+def test_burst_resilience_attains_subset():
+    """§4.1: a burst beyond capacity should NOT cascade into everyone
+    missing; admitted subset keeps SLOs while BE absorbs the rest."""
+    sim = make_slos_serve_cluster(1, PERF)
+    reqs = generate_workload("coder", 6.0, 30.0, 3)
+    res = sim.run(reqs)
+    vllm = make_baseline_cluster("vllm", 1, PERF).run(
+        generate_workload("coder", 6.0, 30.0, 3))
+    assert res.attainment > vllm.attainment

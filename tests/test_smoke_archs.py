@@ -1,0 +1,91 @@
+"""Per-architecture smoke tests (assignment requirement): instantiate the
+REDUCED variant of each family and run one forward + one train step on CPU,
+asserting output shapes and the absence of NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED, get_config, get_reduced
+from repro.models import (encoder_forward, init_encdec_params, init_params,
+                          logits_fn, model_forward)
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_loop import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_full_config_matches_assignment(arch):
+    """The full (dry-run) config carries the exact assigned dimensions."""
+    spec = {
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "deepseek-v2-236b": (60, 5120, 128, 128, 12288, 102400),
+        "mamba2-2.7b": (64, 2560, None, None, 0, 50280),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "smollm-135m": (30, 576, 9, 3, 1536, 49152),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+    }[arch]
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = spec
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.d_ff == ff and cfg.vocab == v
+    if h is not None:
+        assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    # MoE details
+    if arch == "phi3.5-moe-42b-a6.6b":
+        assert cfg.moe.n_experts == 16 and cfg.moe.top_k == 2
+    if arch == "deepseek-v2-236b":
+        assert cfg.moe.n_experts == 160 and cfg.moe.top_k == 6
+        assert cfg.moe.n_shared == 2 and cfg.mla.kv_lora_rank == 512
+    if arch == "mamba2-2.7b":
+        assert cfg.ssm.d_state == 128
+    if arch == "zamba2-7b":
+        assert cfg.ssm.d_state == 64
+        assert "shared_attn" in cfg.block_pattern
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_reduced_within_limits(arch):
+    cfg = get_reduced(arch)
+    assert cfg.n_layers <= 3
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_reduced(arch)
+    B, S = 2, 16
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    labels = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    enc = None
+    if cfg.arch_type == "encdec":
+        params = init_encdec_params(KEY, cfg)
+        frames = jax.random.normal(KEY, (B, cfg.encoder.n_frames,
+                                         cfg.d_model))
+        enc = encoder_forward(params["encoder"], cfg, frames)
+    else:
+        params = init_params(KEY, cfg)
+        if cfg.arch_type == "vlm":
+            enc = jax.random.normal(KEY, (B, cfg.n_image_tokens,
+                                          cfg.d_model))
+    # forward
+    h, _, _ = model_forward(params, cfg, toks, enc_states=enc)
+    lg = logits_fn(params, cfg, h)
+    assert lg.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(lg))), "NaN/inf in logits"
+    # one train step
+    step = make_train_step(cfg, AdamWConfig(total_steps=10, warmup_steps=1),
+                           has_enc=enc is not None)
+    opt = init_opt_state(params)
+    batch = {"tokens": toks, "labels": labels}
+    if enc is not None:
+        batch["enc_states"] = enc
+    params2, opt2, m = jax.jit(step)(params, opt, batch)
+    assert bool(jnp.isfinite(m["loss"])), "NaN loss"
+    assert float(m["grad_norm"]) > 0

@@ -1,0 +1,77 @@
+import math
+
+import pytest
+
+from repro.core.perf_model import PerfModel, opt_perf_model
+from repro.core.spec_planner import acc_len, plan_speculation, strengthen_slo
+
+
+def test_acc_len_bounds():
+    assert acc_len(0, 0.7) == 1.0
+    assert acc_len(4, 0.0) == 1.0
+    for sl in range(1, 8):
+        a = acc_len(sl, 0.7)
+        assert 1.0 < a <= sl + 1
+    # alpha -> 1: every draft accepted
+    assert acc_len(5, 1.0) == 6.0
+
+
+def test_acc_len_monotone():
+    prev = 0.0
+    for sl in range(8):
+        cur = acc_len(sl, 0.6)
+        assert cur > prev
+        prev = cur
+
+
+def test_plan_speculation_extends_feasible_tpot():
+    """§3.2.3 / Fig. 6: TPOTs below the weight-read batch floor are
+    unservable autoregressively; speculation relaxes the per-batch latency
+    constraint (T = TPOT * Acc) and makes them feasible."""
+    perf = opt_perf_model(7e9, spec=True)
+    tiers = [0.008]          # below the ~12ms weight-read floor
+    counts = [10]
+    ar = plan_speculation(counts, tiers, perf, alpha=0.8, max_sl=0)
+    assert ar is None                        # AR cannot serve this SLO
+    plan = plan_speculation(counts, tiers, perf, alpha=0.8)
+    assert plan is not None
+    assert max(plan.spec_lens) >= 1
+    assert plan.prefill_budget_per_batch > 0
+
+
+def test_plan_speculation_improves_prefill_tpt_near_floor():
+    """Near the AR feasibility edge with high acceptance, speculation
+    frees more prefill throughput than AR."""
+    perf = opt_perf_model(7e9, spec=True)
+    tiers, counts = [0.0125], [100]   # weight-read line binds here
+    ar = plan_speculation(counts, tiers, perf, alpha=0.95, max_sl=0)
+    sp = plan_speculation(counts, tiers, perf, alpha=0.95)
+    assert ar is not None and sp is not None
+    assert sp.prefill_tpt > ar.prefill_tpt
+    assert max(sp.spec_lens) >= 1
+
+
+def test_plan_speculation_prefers_ar_when_alpha_low():
+    perf = opt_perf_model(7e9, spec=True)
+    plan = plan_speculation([10], [0.1], perf, alpha=0.05)
+    assert plan is not None
+    # almost-never-accepted drafts are pure overhead
+    assert max(plan.spec_lens) <= 1
+
+
+def test_plan_speculation_no_active_tiers():
+    perf = opt_perf_model(7e9)
+    plan = plan_speculation([0, 0], [0.05, 0.1], perf, alpha=0.7)
+    assert plan.prefill_tpt == math.inf
+
+
+def test_plan_speculation_respects_feasibility():
+    tiny = PerfModel(terms=((1.0, 0.0, 0.0),))   # 1 token/s
+    plan = plan_speculation([100], [0.05], tiny, alpha=0.9)
+    assert plan is None                           # hopeless
+
+
+def test_strengthen_slo():
+    assert strengthen_slo(0.1, 0) == 0.1
+    assert strengthen_slo(0.1, 5) < 0.1
+    assert strengthen_slo(0.1, 1000) > 0.0

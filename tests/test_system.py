@@ -1,0 +1,57 @@
+"""End-to-end behaviour tests for the SLOs-Serve system.
+
+The headline claims, scaled down for CI speed:
+  * capacity ordering — SLOs-Serve sustains higher load than vLLM-style
+    and Sarathi-style baselines at the 90% attainment bar (Fig. 1/9),
+  * multi-replica scaling with SLO-driven routing (Fig. 13),
+  * burst resilience via the best-effort fallback tier (Fig. 11).
+"""
+import pytest
+
+from repro.core import opt_perf_model, find_capacity
+from repro.core.router import make_baseline_cluster, make_slos_serve_cluster
+from repro.core.workload import generate_workload
+
+PERF = opt_perf_model(7e9)
+
+
+@pytest.mark.slow
+def test_capacity_ordering_chatbot():
+    cap = {}
+    cap["ours"] = find_capacity(
+        lambda: make_slos_serve_cluster(1, PERF), "chatbot",
+        duration=30.0, iters=5)
+    cap["vllm"] = find_capacity(
+        lambda: make_baseline_cluster("vllm", 1, PERF), "chatbot",
+        duration=30.0, iters=5)
+    cap["sarathi"] = find_capacity(
+        lambda: make_baseline_cluster("sarathi", 1, PERF), "chatbot",
+        duration=30.0, iters=5)
+    assert cap["ours"] > cap["vllm"]
+    assert cap["ours"] > cap["sarathi"]
+
+
+def test_multi_replica_scaling():
+    r1 = make_slos_serve_cluster(1, PERF).run(
+        generate_workload("chatbot", 6.0, 20.0, 0))
+    r4 = make_slos_serve_cluster(4, PERF).run(
+        generate_workload("chatbot", 24.0, 20.0, 0))
+    # 4 replicas at 4x the load should do at least as well as 1 at 1x
+    assert r4.attainment >= r1.attainment - 0.05
+
+
+def test_burst_resilience_vs_vllm():
+    reqs = lambda: generate_workload("coder", 5.0, 30.0, 7)
+    ours = make_slos_serve_cluster(1, PERF).run(reqs())
+    vllm = make_baseline_cluster("vllm", 1, PERF).run(reqs())
+    assert ours.attainment > vllm.attainment
+    assert ours.n_best_effort > 0        # bursts spilled into the BE tier
+
+
+def test_soft_admission_no_cascade_under_overload():
+    """Soft admission invariant: overload should not cascade into
+    every request missing its SLO (§3.1)."""
+    sim = make_slos_serve_cluster(1, PERF)
+    res = sim.run(generate_workload("chatbot", 14.0, 15.0, 0))
+    attained = sum(1 for r in res.records if r.attained)
+    assert attained >= 0.3 * res.n_requests
