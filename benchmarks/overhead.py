@@ -1,5 +1,7 @@
 """Fig. 15: scheduling overhead per planning call (target: <10 ms,
-majority <2 ms — paper §6.4)."""
+majority <2 ms — paper §6.4), plus the engine-side device-call audit:
+the paged runtime must issue exactly ONE jitted computation per decode
+batch group (the fused lax.scan), however many tokens the group spans."""
 from __future__ import annotations
 
 import numpy as np
@@ -18,5 +20,42 @@ def run(rate: float = 6.0, duration: float = 30.0):
          f"frac_under_2ms={float((oh < 0.002).mean()):.2f}")
 
 
+def run_engine_device_calls(n_decode_tokens: int = 16):
+    """Count jitted device computations on the real paged engine: one
+    prefill call per chunk, one decode call per batch group — O(1) host
+    round-trips where the dense-slot engine paid O(tokens)."""
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.core.batch import Batch
+    from repro.core.slo import StageKind
+    from repro.models import init_params
+    from repro.serving.engine import EngineConfig, ServingEngine
+
+    cfg = get_reduced("smollm-135m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(max_slots=4, max_len=128,
+                                     total_pages=64))
+    rng = np.random.default_rng(0)
+    for rid in (1, 2):
+        eng.add_request(rid, rng.integers(0, cfg.vocab, 16).tolist(),
+                        expected_total=64)
+        b = Batch()
+        b.add(rid, StageKind.PREFILL, 16)
+        eng.execute(b)
+    b = Batch()
+    for rid in (1, 2):
+        b.add(rid, StageKind.DECODE, n_decode_tokens)
+    out = eng.execute(b)
+    n_tokens = sum(len(t) for t in out.values())
+    assert eng.counters["decode_calls"] == 1, eng.counters
+    assert n_tokens == 2 * n_decode_tokens, (n_tokens, out)
+    emit("engine_decode_device_calls", float(eng.counters["decode_calls"]),
+         f"tokens={n_tokens};prefill_calls={eng.counters['prefill_calls']};"
+         f"tokens_per_device_call={n_tokens / eng.counters['decode_calls']:.0f}")
+
+
 if __name__ == "__main__":
     run()
+    run_engine_device_calls()

@@ -40,4 +40,5 @@ while len(out) < 20:
     print(f"verify {verifies}: emitted {len(emitted)} token(s) {emitted}")
 
 print(f"\n{len(out)} tokens in {verifies} verifies "
-      f"({len(out) / verifies:.2f} tokens/verify vs 1.0 autoregressive)")
+      f"({len(out) / verifies:.2f} tokens/verify vs 1.0 autoregressive); "
+      f"each verify = 2 device calls (scanned draft + verify) on paged KV")

@@ -64,6 +64,11 @@ def main():
           f"({stats.dropped} dropped), {stats.tokens_out} tokens generated "
           f"by the engine, SLO attained {stats.attained}/{stats.served} "
           f"(virtual time {fe.clock:.1f}s)")
+    c = engine.counters
+    per_call = c["decode_tokens"] / max(c["decode_calls"], 1)
+    print(f"device calls: {c['prefill_calls']} prefill chunks, "
+          f"{c['decode_calls']} fused decode scans "
+          f"({c['decode_tokens']} tokens, {per_call:.1f} tokens/scan)")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,12 @@
 """Model zoo: dense GQA, MLA, MoE, SSM (Mamba2), hybrid, enc-dec, VLM."""
 from repro.models.config import (EncoderConfig, MLAConfig, ModelConfig,
                                  MoEConfig, SSMConfig)
-from repro.models.transformer import (init_cache, init_params, logits_fn,
-                                      model_forward)
+from repro.models.transformer import (init_cache, init_paged_cache,
+                                      init_params, logits_fn, model_forward)
 from repro.models.encdec import (encdec_forward, encoder_forward,
                                  init_encdec_params)
 
 __all__ = ["ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig",
-           "EncoderConfig", "init_params", "init_cache", "model_forward",
-           "logits_fn", "init_encdec_params", "encoder_forward",
-           "encdec_forward"]
+           "EncoderConfig", "init_params", "init_cache", "init_paged_cache",
+           "model_forward", "logits_fn", "init_encdec_params",
+           "encoder_forward", "encdec_forward"]

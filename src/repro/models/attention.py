@@ -7,9 +7,14 @@ Every mixer supports three execution modes through one code path:
     cache below it plus causally within the chunk
   * decode: q_len == 1 (or spec-verify of a few tokens) against the cache
 
-KV caches are fixed-capacity buffers (B, S_max, n_kv, hd) with per-sequence
-lengths — paged layouts live in serving/kvcache.py; the Pallas kernels in
-kernels/ implement the same contract and are swapped in via ops.attention().
+KV caches come in two layouts sharing one code path:
+  * dense: fixed-capacity buffers (B, S_max, n_kv, hd) with per-sequence
+    lengths (training-time eval, naive references),
+  * paged: global page pools (n_pages, page, n_kv, hd) owned by
+    serving/kvcache.py's PagedKVManager, addressed through per-sequence
+    block tables.  Chunked prefill scatters new KV straight into pages;
+    decode attention dispatches to the Pallas paged kernel on TPU and to
+    a pure-JAX block-table gather (kernels/ref.py semantics) elsewhere.
 """
 from __future__ import annotations
 
@@ -22,6 +27,62 @@ from repro.models.config import ModelConfig
 from repro.models.layers import apply_rope, rms_head_norm
 
 NEG_INF = -1e30
+
+# Paged-decode backend: "auto" picks the Pallas kernel on TPU and the
+# pure-JAX gather everywhere else; tests may force "pallas" / "gather".
+PAGED_DECODE_IMPL = "auto"
+
+
+# ----------------------------- paged KV --------------------------------- #
+def paged_write(pages, vals, block_table, pos0, chunk_len):
+    """Scatter per-token vectors of a chunk into KV pages.
+
+    pages: (P, page, ...); vals: (B, S, ...); block_table: (B, max_pages);
+    pos0 / chunk_len: (B,) int32.  Token i of lane b lands at global
+    position pos0[b]+i inside the lane's block table; positions at or past
+    chunk_len[b] (padding / inactive lanes) are dropped, so one call can
+    serve bucketed prefill chunks and masked decode lanes alike.
+    """
+    P, page = pages.shape[:2]
+    B, S = vals.shape[:2]
+    tail = pages.shape[2:]
+    pos = pos0[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]   # (B,S)
+    slot = jnp.clip(pos // page, 0, block_table.shape[1] - 1)
+    pid = jnp.take_along_axis(block_table, slot, axis=1)
+    flat = pid * page + pos % page
+    valid = jnp.arange(S)[None, :] < chunk_len[:, None]
+    flat = jnp.where(valid, flat, P * page)          # OOB index -> dropped
+    out = pages.reshape((P * page,) + tail).at[flat.reshape(-1)].set(
+        vals.astype(pages.dtype).reshape((B * S,) + tail), mode="drop")
+    return out.reshape(pages.shape)
+
+
+def paged_gather(pages, block_table):
+    """Materialize each lane's logical KV stream from its pages.
+    pages: (P, page, ...), block_table: (B, max_pages)
+    -> (B, max_pages*page, ...)."""
+    g = pages[block_table]                     # (B, max_pages, page, ...)
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_table, kv_len, *,
+                           window=None, scale=None):
+    """Single-token decode attention against paged KV — the backend
+    dispatch point.  q: (B, 1, H, hd) -> (B, 1, H, hd)."""
+    impl = PAGED_DECODE_IMPL
+    if impl == "auto":
+        impl = ("pallas" if jax.default_backend() == "tpu" and window is None
+                else "gather")
+    if impl == "pallas" and window is None:
+        from repro.kernels import ops
+        out = ops.paged_attention(q[:, 0], k_pages, v_pages,
+                                  block_table, kv_len, scale=scale)
+        return out[:, None].astype(q.dtype)
+    k = paged_gather(k_pages, block_table).astype(q.dtype)
+    v = paged_gather(v_pages, block_table).astype(q.dtype)
+    B = q.shape[0]
+    mask = causal_mask(B, 1, k.shape[1], kv_len - 1, kv_len, window)
+    return sdpa(q, k, v, mask, scale)
 
 
 # ------------------------------ init ----------------------------------- #
@@ -138,11 +199,13 @@ def sdpa_chunked(q, k, v, *, pos0, kv_len, window=None, causal=True,
 # --------------------------- self-attention ----------------------------- #
 def attn_forward(p, x, cfg: ModelConfig, *, positions, cache=None,
                  pos0=None, layer_window: Optional[int] = None,
-                 causal: bool = True):
+                 causal: bool = True, block_tables=None, chunk_len=None):
     """Returns (out, new_cache).
 
-    cache: None (full-causal, no cache kept) or dict(k, v) fixed buffers.
+    cache: None (full-causal, no cache kept), dict(k, v) fixed buffers, or
+    dict(k_pages, v_pages) page pools addressed via ``block_tables``.
     pos0: (B,) write offsets into the cache (chunked prefill / decode).
+    chunk_len: (B,) true (unpadded) chunk lengths for paged writes.
     causal=False: bidirectional (encoder) attention, no cache.
     """
     B, Sq, _ = x.shape
@@ -160,7 +223,8 @@ def attn_forward(p, x, cfg: ModelConfig, *, positions, cache=None,
 
     window = layer_window if layer_window is not None else cfg.sliding_window
     chunked = (cfg.attn_impl == "chunked"
-               and (cache["k"].shape[1] if cache is not None else Sq)
+               and (cache["k"].shape[1]
+                    if cache is not None and "k" in cache else Sq)
                > cfg.attn_chunk)
     if cache is None:
         if chunked and causal:
@@ -175,6 +239,21 @@ def attn_forward(p, x, cfg: ModelConfig, *, positions, cache=None,
         else:
             mask = jnp.ones((B, 1, Sq, Sq), bool)
         return sdpa(q, k, v, mask), None
+
+    if "k_pages" in cache:
+        if chunk_len is None:
+            chunk_len = jnp.full((B,), Sq, jnp.int32)
+        kp = paged_write(cache["k_pages"], k, block_tables, pos0, chunk_len)
+        vp = paged_write(cache["v_pages"], v, block_tables, pos0, chunk_len)
+        new_cache = {"k_pages": kp, "v_pages": vp}
+        kv_len = pos0 + Sq
+        if Sq == 1:
+            return paged_decode_attention(q, kp, vp, block_tables, kv_len,
+                                          window=window), new_cache
+        ck = paged_gather(kp, block_tables).astype(q.dtype)
+        cv = paged_gather(vp, block_tables).astype(q.dtype)
+        mask = causal_mask(B, Sq, ck.shape[1], pos0, kv_len, window)
+        return sdpa(q, ck, cv, mask), new_cache
 
     ck, cv = cache["k"], cache["v"]
     upd = jax.vmap(lambda buf, new, s: jax.lax.dynamic_update_slice(
@@ -260,11 +339,15 @@ def init_mla(key, cfg: ModelConfig, dtype=jnp.float32):
     return p
 
 
-def mla_forward(p, x, cfg: ModelConfig, *, positions, cache=None, pos0=None):
+def mla_forward(p, x, cfg: ModelConfig, *, positions, cache=None, pos0=None,
+                block_tables=None, chunk_len=None):
     """MLA: cache the compressed c_kv (kv_lora_rank) + shared rope key.
 
     Cache layout: {"ckv": (B,S,r), "krope": (B,S,rope_hd)} — this is the
     paper-exact compressed cache (DeepSeek-V2 §2.1), 9x smaller than GQA.
+    Paged layout: {"ckv_pages": (P,page,r), "krope_pages": (P,page,rope_hd)}
+    addressed via ``block_tables`` (the latent stream is paged exactly like
+    GQA KV, just with vector-valued tokens).
     """
     c = cfg.mla
     B, Sq, _ = x.shape
@@ -283,7 +366,19 @@ def mla_forward(p, x, cfg: ModelConfig, *, positions, cache=None, pos0=None):
     krope = apply_rope((x @ p["w_krope"])[:, :, None, :],
                        positions, cfg.rope_theta)[:, :, 0, :]  # (B,Sq,rope_hd)
 
-    if cache is not None:
+    if cache is not None and "ckv_pages" in cache:
+        if chunk_len is None:
+            chunk_len = jnp.full((B,), Sq, jnp.int32)
+        cc = paged_write(cache["ckv_pages"], ckv, block_tables, pos0,
+                         chunk_len)
+        ck = paged_write(cache["krope_pages"], krope, block_tables, pos0,
+                         chunk_len)
+        kv_len = pos0 + Sq
+        new_cache = {"ckv_pages": cc, "krope_pages": ck}
+        ckv_all = paged_gather(cc, block_tables).astype(x.dtype)
+        krope_all = paged_gather(ck, block_tables).astype(x.dtype)
+        q_pos0 = pos0
+    elif cache is not None:
         upd2 = jax.vmap(lambda buf, new, s: jax.lax.dynamic_update_slice(
             buf, new, (s, 0)))
         cc = upd2(cache["ckv"], ckv.astype(cache["ckv"].dtype), pos0)

@@ -49,8 +49,13 @@ def _split_proj(cfg: ModelConfig, proj):
     return x, z, B, C, dt, d_in, nheads
 
 
-def _causal_conv(w, b, x, state=None):
-    """Depthwise causal conv1d.  x: (B,S,C); state: (B, d_conv-1, C)."""
+def _causal_conv(w, b, x, state=None, chunk_len=None):
+    """Depthwise causal conv1d.  x: (B,S,C); state: (B, d_conv-1, C).
+
+    chunk_len: (B,) true lengths when x carries bucket padding — the
+    returned state is then the last K-1 REAL inputs (ending at position
+    chunk_len-1), not the padded tail.
+    """
     K = w.shape[0]
     if state is None:
         pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
@@ -58,7 +63,15 @@ def _causal_conv(w, b, x, state=None):
         pad = state.astype(x.dtype)
     xp = jnp.concatenate([pad, x], axis=1)                  # (B, S+K-1, C)
     out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K)) + b
-    new_state = xp[:, -(K - 1):, :] if K > 1 else pad[:, :0]
+    if K == 1:
+        new_state = pad[:, :0]
+    elif chunk_len is None:
+        new_state = xp[:, -(K - 1):, :]
+    else:
+        # real input i sits at xp index K-1+i, so the last K-1 real
+        # inputs are xp[len : len+K-1]
+        new_state = jax.vmap(lambda xb, l: jax.lax.dynamic_slice(
+            xb, (l, 0), (K - 1, xb.shape[1])))(xp, chunk_len)
     return jax.nn.silu(out), new_state
 
 
@@ -117,11 +130,15 @@ def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
     return y, hT.astype(xh.dtype)
 
 
-def ssm_forward(p, x, cfg: ModelConfig, *, cache=None):
+def ssm_forward(p, x, cfg: ModelConfig, *, cache=None, chunk_len=None):
     """Full-sequence (train/prefill) Mamba2 block.
 
     cache: None or {"conv": (B,K-1,C), "state": (B,H,P,N)} — carried for
     chunked prefill continuation; returned updated.
+    chunk_len: (B,) true lengths of a bucket-padded prefill chunk.  Pad
+    tokens get dt=0 — the SSD recurrence then neither decays nor
+    integrates them (dA=exp(0·A)=1, dBx∝dt=0), so the carried state is
+    exactly the state after the real tokens.
     """
     s = cfg.ssm
     proj = x @ p["w_in"]
@@ -129,13 +146,16 @@ def ssm_forward(p, x, cfg: ModelConfig, *, cache=None):
     conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)
     conv_state = cache["conv"] if cache is not None else None
     conv_out, new_conv = _causal_conv(p["conv_w"], p["conv_b"], conv_in,
-                                      conv_state)
+                                      conv_state, chunk_len)
     xi = conv_out[..., :d_in]
     Bm = conv_out[..., d_in:d_in + s.d_state]
     Cm = conv_out[..., d_in + s.d_state:]
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
-    A = -jnp.exp(p["A_log"])
     S = x.shape[1]
+    if chunk_len is not None:
+        valid = jnp.arange(S)[None, :] < chunk_len[:, None]
+        dt = jnp.where(valid[..., None], dt, 0.0)
+    A = -jnp.exp(p["A_log"])
     xh = xi.reshape(*xi.shape[:2], nheads, s.head_dim)
     chunk = min(s.chunk_size, S)
     if S % chunk:

@@ -58,7 +58,8 @@ def init_block(key, kind: str, cfg: ModelConfig, dtype=jnp.float32):
 
 
 def block_forward(p, kind: str, cfg: ModelConfig, x, *, positions,
-                  cache=None, pos0=None, enc_kv=None, moe_cf=None):
+                  cache=None, pos0=None, enc_kv=None, moe_cf=None,
+                  block_tables=None, chunk_len=None):
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     if kind == "ssm":
@@ -66,18 +67,24 @@ def block_forward(p, kind: str, cfg: ModelConfig, x, *, positions,
         if cache is not None and x.shape[1] == 1:
             y, new_cache = ssm_decode_step(p["ssm"], h, cfg, cache)
         else:
-            y, new_cache = ssm_forward(p["ssm"], h, cfg, cache=cache)
+            y, new_cache = ssm_forward(
+                p["ssm"], h, cfg, cache=cache,
+                chunk_len=chunk_len if cache is not None else None)
         return x + y.astype(x.dtype), new_cache, aux
 
     h = apply_norm(p["norm1"], x, cfg.norm)
     if kind in MLA_KINDS:
         self_cache = cache.get("self") if cache else None
         y, new_self = mla_forward(p["attn"], h, cfg, positions=positions,
-                                  cache=self_cache, pos0=pos0)
+                                  cache=self_cache, pos0=pos0,
+                                  block_tables=block_tables,
+                                  chunk_len=chunk_len)
     else:
         self_cache = cache.get("self") if cache else None
         ctx, new_self = attn_forward(p["attn"], h, cfg, positions=positions,
-                                     cache=self_cache, pos0=pos0)
+                                     cache=self_cache, pos0=pos0,
+                                     block_tables=block_tables,
+                                     chunk_len=chunk_len)
         y = attn_output(p["attn"], ctx)
     x = x + y.astype(x.dtype)
     if kind == "cross_attn":
@@ -171,10 +178,65 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return caches
 
 
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     max_seqs: int, dtype=jnp.float32):
+    """Paged serving cache: attention-bearing segments get global page
+    pools shared by every sequence (addressed via block tables); SSM
+    segments keep O(1) per-sequence state rows (max_seqs lanes) since
+    their state does not grow with context."""
+    def attn_pages(n):
+        shape = (n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+        c = {"k_pages": jnp.zeros(shape, dtype),
+             "v_pages": jnp.zeros(shape, dtype)}
+        if n > 1:
+            c = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n,) + a.shape), c)
+        return {"self": c}
+
+    def mla_pages(n):
+        c = {"ckv_pages": jnp.zeros(
+                 (n_pages, page_size, cfg.mla.kv_lora_rank), dtype),
+             "krope_pages": jnp.zeros(
+                 (n_pages, page_size, cfg.mla.qk_rope_head_dim), dtype)}
+        if n > 1:
+            c = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n,) + a.shape), c)
+        return {"self": c}
+
+    def ssm_state(n):
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        nheads = d_in // s.head_dim
+        conv_ch = d_in + 2 * s.d_state
+        c = {"conv": jnp.zeros((max_seqs, s.d_conv - 1, conv_ch), dtype),
+             "state": jnp.zeros((max_seqs, nheads, s.head_dim, s.d_state),
+                                dtype)}
+        if n > 1:
+            c = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n,) + a.shape), c)
+        return c
+
+    caches = []
+    for kind, n in cfg.segments():
+        if kind == "ssm":
+            caches.append(ssm_state(n))
+        elif kind in MLA_KINDS:
+            caches.append(mla_pages(n))
+        else:
+            caches.append(attn_pages(n))
+    return caches
+
+
 # ---------------------------- full forward ----------------------------- #
 def model_forward(params, cfg: ModelConfig, tokens_or_embeds, *,
-                  cache=None, pos0=None, enc_states=None, moe_cf=None):
-    """Returns (hidden (B,S,D), new_cache, aux_loss)."""
+                  cache=None, pos0=None, enc_states=None, moe_cf=None,
+                  block_tables=None, chunk_len=None):
+    """Returns (hidden (B,S,D), new_cache, aux_loss).
+
+    block_tables: (B, max_pages) per-lane page tables when ``cache`` holds
+    paged pools (init_paged_cache); chunk_len: (B,) true chunk lengths so
+    padded positions are never written into pages.
+    """
     if tokens_or_embeds.dtype in (jnp.int32, jnp.int64):
         x = embed(params["embed"], tokens_or_embeds)
     else:
@@ -200,7 +262,8 @@ def model_forward(params, cfg: ModelConfig, tokens_or_embeds, *,
             p = params["shared_attn"]
             x, c_new, aux = block_forward(
                 p, "shared_attn", cfg, x, positions=positions,
-                cache=seg_c, pos0=pos0_arr, enc_kv=None, moe_cf=moe_cf)
+                cache=seg_c, pos0=pos0_arr, enc_kv=None, moe_cf=moe_cf,
+                block_tables=block_tables, chunk_len=chunk_len)
             aux_total += aux
             if cache is not None:
                 new_caches.append(c_new)
@@ -214,7 +277,8 @@ def model_forward(params, cfg: ModelConfig, tokens_or_embeds, *,
         if n == 1:
             x, c_new, aux = block_forward(
                 p, kind, cfg, x, positions=positions, cache=seg_c,
-                pos0=pos0_arr, enc_kv=enc_kv, moe_cf=moe_cf)
+                pos0=pos0_arr, enc_kv=enc_kv, moe_cf=moe_cf,
+                block_tables=block_tables, chunk_len=chunk_len)
             aux_total += aux
             if cache is not None:
                 new_caches.append(c_new)
@@ -227,7 +291,8 @@ def model_forward(params, cfg: ModelConfig, tokens_or_embeds, *,
                     ekv = project_cross_kv(p_l["cross"], enc_states)
                 xx, c_new, aux = block_forward(
                     p_l, kind, cfg, xx, positions=positions, cache=c_l,
-                    pos0=pos0_arr, enc_kv=ekv, moe_cf=moe_cf)
+                    pos0=pos0_arr, enc_kv=ekv, moe_cf=moe_cf,
+                    block_tables=block_tables, chunk_len=chunk_len)
                 return xx, (c_new, aux)
             if cfg.remat and cache is None:
                 # checkpoint each layer: backward recomputes the block

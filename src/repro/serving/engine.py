@@ -1,24 +1,31 @@
 """Continuous-batching execution engine — the stateless BatchForward of
-paper Algorithm 3 made concrete in JAX.
+paper Algorithm 3 made concrete in JAX, on a paged, device-resident
+runtime.
 
 The engine executes planner ``Batch`` objects (Eqn. 1 entries):
   * PREFILL entries process the next chunk of the request's pending context
     (chunked prefill: any split the planner chose), padded to bucket sizes
-    to bound recompilation,
-  * DECODE entries emit tokens autoregressively (gathered into one batched
-    decode call across requests) or via speculative draft+verify when the
-    batch carries ``spec_step > 0`` and a draft model is attached
-    (serving/spec_decode.py).
+    to bound recompilation.  KV lands directly in the page pools — there is
+    no per-request cache slot to gather or scatter.
+  * DECODE entries emit tokens autoregressively.  All requested steps for
+    a batch group run as ONE jitted ``lax.scan`` on device — sampling, EOS
+    masking, position advance and page writes included — and only the
+    final (B, n_steps) token matrix crosses back to the host.  With
+    ``spec_step > 0`` and an attached draft model, decoding goes through
+    the speculative draft+verify executor (serving/spec_decode.py).
 
-Memory is managed by PageAllocator (logical paging for admission /
-preemption, PagedAttention-style) and SlotCache (physical per-request cache
-slots).  The engine is deliberately host-driven: the planner (core/) decides
-every token, the engine just executes — exactly the paper's split.
+Memory is owned by ``PagedKVManager`` (serving/kvcache.py): one manager
+for logical page accounting (admission / preemption) AND the physical
+per-layer page pools + device block tables the model reads through.
+Engine capacity is bounded by pages, not by max_slots × max_len slabs.
+
+``counters`` tracks jitted device computations (prefill_calls,
+decode_calls, decode_tokens) so benchmarks/overhead.py can assert the
+one-device-call-per-decode-group invariant.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
@@ -29,7 +36,7 @@ from repro.core.batch import Batch
 from repro.core.slo import StageKind
 from repro.models.config import ModelConfig
 from repro.models.transformer import logits_fn, model_forward
-from repro.serving.kvcache import PageAllocator, SlotCache
+from repro.serving.kvcache import PagedKVManager
 from repro.serving.sampling import sample
 
 
@@ -42,8 +49,8 @@ def _bucket(n: int, buckets=(8, 16, 32, 64, 128, 256, 512, 1024, 2048)) -> int:
 
 @dataclasses.dataclass
 class EngineConfig:
-    max_slots: int = 8
-    max_len: int = 512
+    max_slots: int = 8                # max concurrent sequences
+    max_len: int = 512                # per-sequence context cap (table width)
     page_size: int = 16
     total_pages: int = 1024
     dtype: object = jnp.float32
@@ -68,49 +75,132 @@ class ServingEngine:
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg or EngineConfig()
-        self.slots = SlotCache.create(cfg, self.ecfg.max_slots,
-                                      self.ecfg.max_len, self.ecfg.dtype)
-        self.pages = PageAllocator(self.ecfg.total_pages,
-                                   self.ecfg.page_size)
+        self.kv = PagedKVManager(cfg, total_pages=self.ecfg.total_pages,
+                                 page_size=self.ecfg.page_size,
+                                 max_seqs=self.ecfg.max_slots,
+                                 max_len=self.ecfg.max_len,
+                                 dtype=self.ecfg.dtype)
         self.reqs: dict[int, RequestCtx] = {}
         self.key = jax.random.PRNGKey(self.ecfg.seed)
         self._moe_cf = (float(cfg.moe.n_experts) / cfg.moe.top_k
                         if cfg.moe else None)
-        self._fwd = jax.jit(self._forward)
+        # cache args are donated: PagedKVManager.absorb replaces the pools
+        # right after each call, so XLA may update pages in place instead
+        # of copying the whole KV budget per step
+        self._prefill = jax.jit(self._prefill_forward, donate_argnums=(2,))
+        self._decode = jax.jit(self._decode_scan, donate_argnums=(1,),
+                               static_argnames=("n_steps",))
+        self._verify = jax.jit(self._verify_forward, donate_argnums=(2,))
+        self.counters = {"prefill_calls": 0, "decode_calls": 0,
+                         "decode_tokens": 0, "spec_draft_calls": 0,
+                         "spec_verify_calls": 0}
         # speculative decoding: (draft_cfg, draft_params)
         self.spec = None
         if draft is not None:
             from repro.serving.spec_decode import SpecDecoder
             self.spec = SpecDecoder(self, draft[0], draft[1])
 
-    # ------------------------------------------------------------------ #
-    def _forward(self, params, tokens, cache, pos0, enc_states):
+    # ------------------------- jitted programs -------------------------- #
+    def _prefill_forward(self, params, tokens, cache, pos0, true_len, bt,
+                         enc_states, key):
+        """One chunk: write KV into pages, return the token sampled at the
+        last REAL position (position true_len-1 of the padded chunk)."""
         h, cache, _ = model_forward(params, self.cfg, tokens, cache=cache,
                                     pos0=pos0, enc_states=enc_states,
-                                    moe_cf=self._moe_cf)
-        return logits_fn(params, self.cfg, h), cache
+                                    moe_cf=self._moe_cf, block_tables=bt,
+                                    chunk_len=true_len)
+        logits = logits_fn(params, self.cfg, h)
+        last = jnp.take(logits[0], true_len[0] - 1, axis=0)
+        return sample(last, key, self.ecfg.temperature), cache
+
+    def _verify_forward(self, params, tokens, cache, pos0, true_len, bt,
+                        enc_states):
+        """Spec-decode verify: one pass over [last, drafts...]; returns the
+        greedy target token at every position (host picks the accepted
+        prefix)."""
+        h, cache, _ = model_forward(params, self.cfg, tokens, cache=cache,
+                                    pos0=pos0, enc_states=enc_states,
+                                    moe_cf=self._moe_cf, block_tables=bt,
+                                    chunk_len=true_len)
+        logits = logits_fn(params, self.cfg, h)
+        return jnp.argmax(logits[0], axis=-1).astype(jnp.int32), cache
+
+    def _decode_scan(self, params, cache, tokens0, pos0, steps, eos, bt,
+                     enc_states, key, *, n_steps):
+        """All n_steps decode steps for a batch group in one device
+        program.  Per-lane step budgets (``steps``) and EOS stop lanes
+        early; frozen lanes emit -1 and neither write KV nor advance."""
+        lane_axes = self.kv.lane_select_axes()
+
+        def step(carry, i):
+            cache, tok, pos, done, key = carry
+            active = (~done) & (i < steps)
+            h, new_cache, _ = model_forward(
+                params, self.cfg, tok[:, None], cache=cache, pos0=pos,
+                enc_states=enc_states, moe_cf=self._moe_cf,
+                block_tables=bt, chunk_len=active.astype(jnp.int32))
+            logits = logits_fn(params, self.cfg, h)[:, -1]
+            key, sk = jax.random.split(key)
+            nxt = sample(logits, sk, self.ecfg.temperature)
+
+            def sel(old, new, ax):
+                if ax < 0:            # page pool: writes already masked
+                    return new
+                shape = [1] * new.ndim
+                shape[ax] = active.shape[0]
+                return jnp.where(active.reshape(shape), new, old)
+
+            cache = jax.tree.map(sel, cache, new_cache, lane_axes)
+            emit = jnp.where(active, nxt, -1)
+            tok = jnp.where(active, nxt, tok)
+            pos = pos + active.astype(pos.dtype)
+            done = done | (active & (nxt == eos))
+            return (cache, tok, pos, done, key), emit
+
+        carry0 = (cache, tokens0, pos0,
+                  jnp.zeros(tokens0.shape, bool), key)
+        (cache, _, pos, done, _), emitted = jax.lax.scan(
+            step, carry0, jnp.arange(n_steps))
+        return cache, emitted.T, pos, done                # emitted: (B, S)
 
     # ------------------------------------------------------------------ #
     def add_request(self, rid: int, prompt: list, expected_total: int,
                     enc_states=None) -> bool:
-        """Admit a request: reserve pages + a cache slot."""
-        if not self.pages.can_allocate(expected_total):
+        """Admit a request: a sequence slot + pages for the expected
+        context.  ``expected_total`` may over-reserve pages (a budget
+        hint), but a prompt that cannot fit the per-sequence context cap
+        is rejected here rather than crashing mid-prefill."""
+        if len(prompt) > self.ecfg.max_len:
             return False
-        if self.slots.acquire(rid) is None:
+        if not self.kv.admit(rid, expected_total):
             return False
-        self.pages.allocate(rid, expected_total)
         self.reqs[rid] = RequestCtx(rid=rid, prompt=list(prompt),
                                     pending=list(prompt), generated=[],
                                     enc_states=enc_states)
         return True
 
     def finish(self, rid: int) -> None:
-        self.pages.release(rid)
-        self.slots.release(rid)
+        self.kv.release(rid)
+        if self.spec is not None:
+            self.spec.release(rid)
         self.reqs.pop(rid, None)
 
     def context_len(self, rid: int) -> int:
-        return int(self.slots.pos[self.slots.slot_of[rid]])
+        return self.kv.length(rid)
+
+    def rollback(self, rid: int, n_tokens: int) -> None:
+        """Discard the last n cache positions (spec-decode rejection) —
+        with paged KV this is a block-table length decrement."""
+        if n_tokens:
+            self.kv.truncate(rid, n_tokens)
+
+    def _reserve(self, rid: int, new_total: int) -> None:
+        if new_total > self.ecfg.max_len:
+            raise RuntimeError(
+                f"request {rid}: context {new_total} exceeds max_len "
+                f"{self.ecfg.max_len}")
+        if not self.kv.extend(rid, new_total):
+            raise RuntimeError(f"request {rid}: out of KV pages")
 
     # ------------------------------------------------------------------ #
     def execute(self, batch: Batch) -> dict[int, list]:
@@ -140,67 +230,97 @@ class ServingEngine:
     def _prefill_chunk(self, rid: int, n_tokens: int) -> list:
         ctx = self.reqs[rid]
         chunk = ctx.pending[:n_tokens]
-        ctx.pending = ctx.pending[n_tokens:]
         if not chunk:
             return []
-        slot = self.slots.slot_of[rid]
+        slot = self.kv.seq_of[rid]
+        pos = self.kv.length(rid)
         L = len(chunk)
-        Lp = _bucket(L)
+        self._reserve(rid, pos + L)      # before consuming pending: a
+        ctx.pending = ctx.pending[n_tokens:]   # failed reserve keeps the
+        Lp = _bucket(L)                        # prompt tokens retryable
         toks = np.zeros((1, Lp), np.int32)
         toks[0, :L] = chunk
-        pos0 = self.slots.pos[slot][None]
-        sub = self.slots.gather([slot])
-        logits, sub = self._fwd(self.params, jnp.asarray(toks), sub, pos0,
-                                ctx.enc_states)
-        self.slots.scatter([slot], sub)
-        self.slots.pos = self.slots.pos.at[slot].add(L)
+        cache = self.kv.lane_cache([slot])
+        if ctx.pending:
+            # mid-prompt chunk: the sampled token is discarded, so don't
+            # advance the RNG stream — temperature>0 output must not
+            # depend on how the planner split the prefill
+            sk = jax.random.PRNGKey(0)
+        else:
+            self.key, sk = jax.random.split(self.key)
+        tok, cache = self._prefill(
+            self.params, jnp.asarray(toks), cache,
+            jnp.asarray([pos], jnp.int32), jnp.asarray([L], jnp.int32),
+            self.kv.table_rows([slot]), ctx.enc_states, sk)
+        self.kv.absorb([slot], cache)
+        self.kv.seq_len[slot] += L
+        self.counters["prefill_calls"] += 1
         if not ctx.pending:
             # prefill complete: the last position's logits yield the first
             # output token (TTFT = time-to-FIRST-token)
-            self.key, sk = jax.random.split(self.key)
-            tok = int(np.asarray(sample(logits[0, L - 1], sk,
-                                        self.ecfg.temperature)))
-            ctx.generated.append(tok)
-            return [tok]
+            t = int(tok)
+            ctx.generated.append(t)
+            return [t]
         return []
 
     # ------------------------------------------------------------------ #
     def _decode_batched(self, steps_of) -> dict[int, list]:
-        """steps_of: {rid: n_steps} or list of rids (1 step each)."""
+        """steps_of: {rid: n_steps} or list of rids (1 step each).  One
+        jitted device computation for the whole group."""
         if not isinstance(steps_of, dict):
             steps_of = {r: 1 for r in steps_of}
-        rids = list(steps_of)
-        out = {r: [] for r in rids}
-        for step in range(max(steps_of.values(), default=0)):
-            live = [r for r in rids if not self.reqs[r].done
-                    and step < steps_of[r]]
-            if not live:
-                break
-            slots = [self.slots.slot_of[r] for r in live]
-            last = [self._last_token(r) for r in live]
-            B = _bucket(len(live), (1, 2, 4, 8, 16, 32, 64, 128))
-            slots_p = slots + [slots[0]] * (B - len(slots))
-            last_p = last + [0] * (B - len(last))
-            sub = self.slots.gather(slots_p)
-            pos = self.slots.pos[jnp.asarray(slots_p)]
-            toks = jnp.asarray(last_p, jnp.int32)[:, None]
-            enc = self._gather_enc(live, B)
-            logits, sub = self._fwd(self.params, toks, sub, pos, enc)
-            self.key, sk = jax.random.split(self.key)
-            nxt = np.asarray(sample(logits[:, -1], sk,
-                                    self.ecfg.temperature))
-            # scatter back only live entries (padded tail would corrupt)
-            self.slots.scatter(slots, jax.tree.map(
-                lambda c, ax: jnp.take(c, jnp.arange(len(slots)), axis=ax),
-                sub, self.slots.axes))
-            for i, r in enumerate(live):
-                self.slots.pos = self.slots.pos.at[
-                    self.slots.slot_of[r]].add(1)
-                tok = int(nxt[i])
-                self.reqs[r].generated.append(tok)
-                out[r].append(tok)
-                if self.reqs[r].eos is not None and tok == self.reqs[r].eos:
-                    self.reqs[r].done = True
+        out = {r: [] for r in steps_of}
+        live = [r for r in steps_of
+                if r in self.reqs and not self.reqs[r].done
+                and steps_of[r] > 0]
+        if not live:
+            return out
+        # Cap each lane's budget to the pages/context actually available
+        # (sequential: earlier lanes claim free pages first) rather than
+        # crashing the serving loop mid-stream; the planner sees the
+        # shortfall as fewer emitted tokens.
+        capped = {}
+        for r in live:
+            cur = self.kv.length(r)
+            n = min(steps_of[r], self.kv.token_capacity(r) - cur)
+            if n > 0:
+                self.kv.extend(r, cur + n)
+                capped[r] = n
+        steps_of = capped
+        live = [r for r in live if r in capped]
+        if not live:
+            return out
+        n_steps = _bucket(max(steps_of[r] for r in live),
+                          (1, 2, 4, 8, 16, 32, 64, 128, 256))
+        B = _bucket(len(live), (1, 2, 4, 8, 16, 32, 64, 128))
+        pad = B - len(live)
+        slots = [self.kv.seq_of[r] for r in live]
+        slots_p = slots + [slots[0]] * pad
+        steps = jnp.asarray([steps_of[r] for r in live] + [0] * pad,
+                            jnp.int32)
+        toks0 = jnp.asarray([self._last_token(r) for r in live] + [0] * pad,
+                            jnp.int32)
+        eos = jnp.asarray([self.reqs[r].eos if self.reqs[r].eos is not None
+                           else -1 for r in live] + [-1] * pad, jnp.int32)
+        pos0 = jnp.asarray(self.kv.seq_len[slots_p], jnp.int32)
+        cache = self.kv.lane_cache(slots_p)
+        self.key, sk = jax.random.split(self.key)
+        cache, emitted, _, _ = self._decode(
+            self.params, cache, toks0, pos0, steps, eos,
+            self.kv.table_rows(slots_p), self._gather_enc(live, B), sk,
+            n_steps=n_steps)
+        self.counters["decode_calls"] += 1
+        self.kv.absorb(slots, cache)
+        em = np.asarray(emitted)                  # ONE host sync per group
+        for i, r in enumerate(live):
+            ctx = self.reqs[r]
+            toks = [int(t) for t in em[i, :steps_of[r]] if t >= 0]
+            ctx.generated.extend(toks)
+            out[r].extend(toks)
+            self.kv.seq_len[slots[i]] += len(toks)
+            self.counters["decode_tokens"] += len(toks)
+            if ctx.eos is not None and toks and toks[-1] == ctx.eos:
+                ctx.done = True
         return out
 
     def _gather_enc(self, rids, B):
@@ -217,8 +337,3 @@ class ServingEngine:
         if ctx.generated:
             return ctx.generated[-1]
         return ctx.prompt[-1] if ctx.prompt else 0
-
-    def rollback(self, rid: int, n_tokens: int) -> None:
-        """Discard the last n cache positions (spec-decode rejection)."""
-        slot = self.slots.slot_of[rid]
-        self.slots.pos = self.slots.pos.at[slot].add(-n_tokens)

@@ -71,8 +71,8 @@ class ServingFrontend:
         now = self.clock
         arrivals = [r for r in self.new_q if r.arrival <= now]
         self.new_q = [r for r in self.new_q if r.arrival > now]
-        mem_free = (self.engine.pages.total_pages
-                    - self.engine.pages.used_pages)
+        mem_free = (self.engine.kv.total_pages
+                    - self.engine.kv.used_pages)
         res = self.sched.plan(now, self.running, arrivals, mem_free)
         for r in res.admitted:
             r.state = RequestState.RUNNING

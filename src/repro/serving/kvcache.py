@@ -1,25 +1,31 @@
-"""KV-cache memory management: page accounting + slot-based model caches.
+"""KV-cache memory management: the paged, device-resident serving cache.
 
-``PageAllocator`` implements PagedAttention-style logical page bookkeeping
-(allocation, per-request page tables, preemption-free) used by the engine
-for admission and by the best-effort tier for preemption accounting.
+``PageAllocator`` is the logical page accountant (PagedAttention-style
+free list + per-request page tables) — kept standalone so the planner,
+the best-effort preemption tier, and property tests can reason about
+memory without touching a device.
 
-Physical storage on the execution path is slot-contiguous — each active
-request owns one slot of a fixed (max_slots, max_len) cache pytree; the
-block-table gather layout for TPU lives in kernels/paged_attention.py
-(validated against the same reference).
+``PagedKVManager`` extends it into the single physical manager the engine
+uses: it owns the per-layer page pools (models/transformer.py
+``init_paged_cache``), the device block tables that address them, the
+per-sequence lane state (SSM conv/ssd rows, which are O(1) per request
+and therefore slot- rather than page-indexed), and the per-sequence
+lengths.  Allocation / release / preemption keep the host free list and
+the device block tables in lockstep; speculative-decode rollback is a
+pure length decrement (``truncate``) — pages stay mapped, later tokens
+simply overwrite them.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.config import ModelConfig
-from repro.models.transformer import init_cache
+from repro.models.transformer import init_paged_cache
 
 
 class PageAllocator:
@@ -65,61 +71,168 @@ class PageAllocator:
         return self.total_pages - len(self.free)
 
 
-def slot_axes(cfg: ModelConfig, cache) -> list:
-    """Pytree of ints (aligned with the cache) giving each leaf's slot axis:
-    stacked segments are (n_layers, slots, ...) -> 1, single -> 0."""
-    axes = []
-    for seg_cache, (kind, n) in zip(cache, cfg.segments()):
-        ax = 1 if n > 1 else 0
-        axes.append(jax.tree.map(lambda _: ax, seg_cache))
-    return axes
+class PagedKVManager(PageAllocator):
+    """Unified logical + physical KV manager (PageAllocator ∪ SlotCache).
 
+    Device state:
+      * ``pools``        — per-segment cache pytree: page pools for
+                           attention/MLA segments, (max_seqs, ...) lane
+                           rows for SSM segments,
+      * ``block_tables`` — (max_seqs, max_pages_per_seq) int32, row s maps
+                           sequence-slot s's logical pages to pool pages.
+    Host mirrors: ``seq_len`` (np.int64 per slot), ``seq_of`` (rid→slot),
+    and the inherited free list / page tables.
+    """
 
-@dataclasses.dataclass
-class SlotCache:
-    """Fixed-capacity batched model cache; one slot per active request."""
-    cfg: ModelConfig
-    max_slots: int
-    max_len: int
-    cache: list                       # model cache pytree
-    axes: list                        # per-leaf slot axis (0 or 1)
-    pos: jnp.ndarray                  # (max_slots,) tokens written per slot
-    free_slots: list[int] = dataclasses.field(default_factory=list)
-    slot_of: dict[int, int] = dataclasses.field(default_factory=dict)
+    def __init__(self, cfg: ModelConfig, *, total_pages: int,
+                 page_size: int = 16, max_seqs: int = 8,
+                 max_len: int = 512, dtype=jnp.float32):
+        super().__init__(total_pages, page_size)
+        self.cfg = cfg
+        self.max_seqs = max_seqs
+        self.max_len = max_len
+        self.max_pages_per_seq = max(1, math.ceil(max_len / page_size))
+        self.pools = init_paged_cache(cfg, total_pages, page_size,
+                                      max_seqs, dtype)
+        self.block_tables = jnp.zeros((max_seqs, self.max_pages_per_seq),
+                                      jnp.int32)
+        self.seq_len = np.zeros((max_seqs,), np.int64)
+        self.free_seqs = list(range(max_seqs - 1, -1, -1))
+        self.seq_of: dict[int, int] = {}
 
-    @classmethod
-    def create(cls, cfg: ModelConfig, max_slots: int, max_len: int,
-               dtype=jnp.float32) -> "SlotCache":
-        cache = init_cache(cfg, max_slots, max_len, dtype)
-        return cls(cfg=cfg, max_slots=max_slots, max_len=max_len,
-                   cache=cache, axes=slot_axes(cfg, cache),
-                   pos=jnp.zeros((max_slots,), jnp.int32),
-                   free_slots=list(range(max_slots - 1, -1, -1)))
-
+    # --------------------------- seq slots ----------------------------- #
     def acquire(self, rid: int) -> Optional[int]:
-        if rid in self.slot_of:
-            return self.slot_of[rid]
-        if not self.free_slots:
+        if rid in self.seq_of:
+            return self.seq_of[rid]
+        if not self.free_seqs:
             return None
-        s = self.free_slots.pop()
-        self.slot_of[rid] = s
-        self.pos = self.pos.at[s].set(0)
+        s = self.free_seqs.pop()
+        self.seq_of[rid] = s
+        self.seq_len[s] = 0
+        self.block_tables = self.block_tables.at[s].set(0)
         return s
 
-    def release(self, rid: int) -> None:
-        s = self.slot_of.pop(rid, None)
+    def admit(self, rid: int, expected_total: int) -> bool:
+        """Admission = a sequence slot + pages for the expected context.
+
+        ``expected_total`` is the request's full expected memory demand
+        (the paper's admission budget) and is reserved in full even when
+        it exceeds the per-sequence mappable window (max_len) — the
+        surplus pages are a deliberate reservation against the shared
+        pool, exactly like the seed's logical allocator, not a leak."""
+        if not self.can_allocate(expected_total):
+            return False
+        if self.acquire(rid) is None:
+            return False
+        self.allocate(rid, expected_total)
+        return True
+
+    # ------------------ page ops (device table in lockstep) ------------ #
+    def _map_pages(self, rid: int, start: int, pages: list[int]) -> None:
+        s = self.seq_of.get(rid)
+        if s is None or start >= self.max_pages_per_seq or not pages:
+            return
+        end = min(start + len(pages), self.max_pages_per_seq)
+        self.block_tables = self.block_tables.at[s, start:end].set(
+            jnp.asarray(pages[:end - start], jnp.int32))
+
+    def allocate(self, rid: int, n_tokens: int) -> Optional[list[int]]:
+        have = len(self.tables.get(rid, []))
+        pages = super().allocate(rid, n_tokens)
+        if pages:
+            self._map_pages(rid, have, pages)
+        return pages
+
+    def extend(self, rid: int, new_total_tokens: int) -> bool:
+        have = len(self.tables.get(rid, []))
+        if not super().extend(rid, new_total_tokens):
+            return False
+        new = self.tables.get(rid, [])[have:]
+        if new:
+            self._map_pages(rid, have, new)
+        return True
+
+    def release(self, rid: int) -> int:
+        n = super().release(rid)
+        s = self.seq_of.pop(rid, None)
         if s is not None:
-            self.free_slots.append(s)
+            self.block_tables = self.block_tables.at[s].set(0)
+            self.seq_len[s] = 0
+            self.free_seqs.append(s)
+        return n
 
-    def gather(self, slots: list[int]):
+    def preempt(self, rid: int) -> int:
+        """Victimize a request: free its pages (and KV content) but keep
+        its sequence slot so it can be re-prefilled after re-admission."""
+        n = super().release(rid)
+        self.tables[rid] = []
+        s = self.seq_of.get(rid)
+        if s is not None:
+            self.block_tables = self.block_tables.at[s].set(0)
+            self.seq_len[s] = 0
+        return n
+
+    def truncate(self, rid: int, n_tokens: int) -> None:
+        """Roll back the last n cache positions (spec-decode rejection):
+        a pure length decrement — the pages stay mapped."""
+        self.seq_len[self.seq_of[rid]] -= n_tokens
+
+    def length(self, rid: int) -> int:
+        return int(self.seq_len[self.seq_of[rid]])
+
+    def token_capacity(self, rid: int) -> int:
+        """Max context this request could reach right now: its mapped
+        pages plus the whole free list, capped by the block-table width."""
+        have = len(self.tables.get(rid, []))
+        return min(self.max_len, (have + len(self.free)) * self.page_size)
+
+    # ------------------------ device-facing views ----------------------- #
+    def table_rows(self, slots) -> jnp.ndarray:
+        """(len(slots), max_pages_per_seq) block-table rows."""
+        return jnp.take(self.block_tables, jnp.asarray(slots, jnp.int32),
+                        axis=0)
+
+    def lane_cache(self, slots):
+        """Per-call cache pytree: page pools pass through whole (they are
+        global, addressed by block tables); SSM lane state is gathered to
+        one row per batch lane."""
         idx = jnp.asarray(slots, jnp.int32)
-        return jax.tree.map(lambda c, ax: jnp.take(c, idx, axis=ax),
-                            self.cache, self.axes)
+        out = []
+        for pool, (kind, n) in zip(self.pools, self.cfg.segments()):
+            if kind == "ssm":
+                ax = 1 if n > 1 else 0
+                out.append(jax.tree.map(
+                    lambda c, ax=ax: jnp.take(c, idx, axis=ax), pool))
+            else:
+                out.append(pool)
+        return out
 
-    def scatter(self, slots: list[int], sub_cache) -> None:
+    def absorb(self, slots, new_cache) -> None:
+        """Store a model call's updated cache: pools replace wholesale
+        (functionally updated in place), lane rows scatter back."""
         idx = jnp.asarray(slots, jnp.int32)
+        n_live = len(slots)
+        pools = []
+        for pool, new, (kind, n) in zip(self.pools, new_cache,
+                                        self.cfg.segments()):
+            if kind == "ssm":
+                ax = 1 if n > 1 else 0
 
-        def put(c, s, ax):
-            return c.at[idx].set(s) if ax == 0 else c.at[:, idx].set(s)
+                def put(c, s, ax=ax):
+                    s = jnp.take(s, jnp.arange(n_live), axis=ax)
+                    return (c.at[idx].set(s) if ax == 0
+                            else c.at[:, idx].set(s))
+                pools.append(jax.tree.map(put, pool, new))
+            else:
+                pools.append(new)
+        self.pools = pools
 
-        self.cache = jax.tree.map(put, self.cache, sub_cache, self.axes)
+    def lane_select_axes(self):
+        """Pytree (aligned with a lane_cache) of the lane axis for each
+        SSM leaf, or -1 for paged-pool leaves — used by the engine's
+        decode scan to freeze inactive lanes' state."""
+        out = []
+        for pool, (kind, n) in zip(self.pools, self.cfg.segments()):
+            ax = (1 if n > 1 else 0) if kind == "ssm" else -1
+            out.append(jax.tree.map(lambda _, ax=ax: ax, pool))
+        return out

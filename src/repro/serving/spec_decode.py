@@ -6,6 +6,13 @@ them in ONE batched forward (the extra batching opportunity §2.2 exploits),
 the accepted prefix plus one corrected/bonus token is emitted, and both
 caches are rolled back to the validated context.
 
+Both models run on paged KV (their own ``PagedKVManager`` each).  The
+draft's ``sl``-step autoregression is a single jitted ``lax.scan`` device
+program and the verify is one more — a whole cycle costs two device
+computations and two host syncs, independent of ``sl``.  Rollback on
+rejection is a block-table length decrement (``truncate``): rejected pages
+stay mapped and are simply overwritten by the next tokens.
+
 Cache invariant shared with the engine: a cache holds embeddings of
 ``(prompt + generated)[:-1]`` and the next model input is the last token.
 """
@@ -17,7 +24,8 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.transformer import logits_fn, model_forward
-from repro.serving.kvcache import SlotCache
+from repro.serving.engine import _bucket
+from repro.serving.kvcache import PagedKVManager
 
 
 class SpecDecoder:
@@ -25,34 +33,75 @@ class SpecDecoder:
         self.engine = engine
         self.cfg = draft_cfg
         self.params = draft_params
-        self.slots = SlotCache.create(draft_cfg, engine.ecfg.max_slots,
-                                      engine.ecfg.max_len, engine.ecfg.dtype)
-        self._fwd = jax.jit(self._forward)
+        e = engine.ecfg
+        self.kv = PagedKVManager(draft_cfg, total_pages=e.total_pages,
+                                 page_size=e.page_size, max_seqs=e.max_slots,
+                                 max_len=e.max_len, dtype=e.dtype)
+        self._moe_cf = (float(draft_cfg.moe.n_experts) / draft_cfg.moe.top_k
+                        if draft_cfg.moe else None)
+        self._sync = jax.jit(self._sync_forward, donate_argnums=(2,))
+        self._draft = jax.jit(self._draft_scan, donate_argnums=(1,),
+                              static_argnames=("n_steps",))
 
-    def _forward(self, params, tokens, cache, pos0):
-        h, cache, _ = model_forward(params, self.cfg, tokens, cache=cache,
-                                    pos0=pos0)
-        return logits_fn(params, self.cfg, h), cache
+    # ------------------------- jitted programs -------------------------- #
+    def _sync_forward(self, params, tokens, cache, pos0, true_len, bt):
+        """Catch the draft cache up on tokens the target already holds."""
+        _, cache, _ = model_forward(params, self.cfg, tokens, cache=cache,
+                                    pos0=pos0, moe_cf=self._moe_cf,
+                                    block_tables=bt, chunk_len=true_len)
+        return cache
+
+    def _draft_scan(self, params, cache, tok0, pos0, bt, sl, *, n_steps):
+        """Greedy-draft ``sl`` tokens in one device program.  ``n_steps``
+        is the bucketed (static) scan length so distinct speculative
+        lengths share compilations; steps past ``sl`` neither write KV
+        nor advance state, and the host discards their outputs."""
+        lane_axes = self.kv.lane_select_axes()
+
+        def step(carry, i):
+            cache, tok, pos = carry
+            active = i < sl
+            h, new_cache, _ = model_forward(
+                params, self.cfg, tok[:, None], cache=cache, pos0=pos,
+                moe_cf=self._moe_cf, block_tables=bt,
+                chunk_len=jnp.where(active, jnp.ones_like(pos),
+                                    jnp.zeros_like(pos)))
+            nxt = jnp.argmax(logits_fn(params, self.cfg, h)[:, -1],
+                             axis=-1).astype(jnp.int32)
+
+            def sel(old, new, ax):
+                return new if ax < 0 else jnp.where(active, new, old)
+
+            cache = jax.tree.map(sel, cache, new_cache, lane_axes)
+            tok = jnp.where(active, nxt, tok)
+            pos = pos + active.astype(pos.dtype)
+            return (cache, tok, pos), nxt
+        (cache, _, _), drafts = jax.lax.scan(
+            step, (cache, tok0, pos0), jnp.arange(n_steps))
+        return cache, drafts[:, 0]                        # (n_steps,)
 
     # ------------------------------------------------------------------ #
     def _seq(self, rid: int) -> list:
         ctx = self.engine.reqs[rid]
         return list(ctx.prompt) + list(ctx.generated)
 
-    def _draft_run(self, rid: int, tokens: list) -> jnp.ndarray:
-        """Feed ``tokens`` through the draft at its current position."""
-        slot = self.slots.slot_of[rid]
-        from repro.serving.engine import _bucket
+    def _draft_catch_up(self, rid: int, tokens: list) -> None:
+        slot = self.kv.seq_of[rid]
+        pos = self.kv.length(rid)
         L = len(tokens)
         Lp = _bucket(L)
+        if not self.kv.extend(rid, pos + L):
+            raise RuntimeError(f"draft {rid}: out of KV pages")
         buf = np.zeros((1, Lp), np.int32)
         buf[0, :L] = tokens
-        pos0 = self.slots.pos[slot][None]
-        sub = self.slots.gather([slot])
-        logits, sub = self._fwd(self.params, jnp.asarray(buf), sub, pos0)
-        self.slots.scatter([slot], sub)
-        self.slots.pos = self.slots.pos.at[slot].add(L)
-        return logits[0, L - 1]
+        cache = self._sync(self.params, jnp.asarray(buf),
+                           self.kv.lane_cache([slot]),
+                           jnp.asarray([pos], jnp.int32),
+                           jnp.asarray([L], jnp.int32),
+                           self.kv.table_rows([slot]))
+        self.kv.absorb([slot], cache)
+        self.kv.seq_len[slot] += L
+        self.engine.counters["spec_draft_calls"] += 1
 
     # ------------------------------------------------------------------ #
     def decode(self, rid: int, n_tokens: int) -> list:
@@ -61,38 +110,51 @@ class SpecDecoder:
         eng = self.engine
         sl = max(n_tokens - 1, 0)
         if sl == 0:
-            return list(eng._decode_batched([rid], 1)[rid])
-        if self.slots.acquire(rid) is None:
-            return list(eng._decode_batched([rid], n_tokens)[rid])
+            return list(eng._decode_batched([rid])[rid])
+        if self.kv.acquire(rid) is None:
+            return list(eng._decode_batched({rid: n_tokens})[rid])
         seq = self._seq(rid)
-        dpos = int(self.slots.pos[self.slots.slot_of[rid]])
-        # sync the draft cache up to seq[:-1]
-        if dpos < len(seq) - 1:
-            self._draft_run(rid, seq[dpos:len(seq) - 1])
+        # near the context/page limit the verify window no longer fits:
+        # fall back to plain decode, which caps its budget gracefully
+        if (eng.kv.token_capacity(rid) < len(seq) + sl
+                or self.kv.token_capacity(rid) < len(seq) - 1 + sl):
+            return list(eng._decode_batched({rid: n_tokens})[rid])
+        dpos = self.kv.length(rid)
+        if dpos < len(seq) - 1:                # sync draft up to seq[:-1]
+            self._draft_catch_up(rid, seq[dpos:len(seq) - 1])
 
-        # draft sl tokens autoregressively
-        drafts = []
-        cur = seq[-1]
-        for _ in range(sl):
-            logits = self._draft_run(rid, [cur])
-            cur = int(jnp.argmax(logits))
-            drafts.append(cur)
+        # draft sl tokens: ONE scanned device call
+        slot = self.kv.seq_of[rid]
+        if not self.kv.extend(rid, len(seq) - 1 + sl):
+            raise RuntimeError(f"draft {rid}: out of KV pages")
+        cache, drafts_dev = self._draft(
+            self.params, self.kv.lane_cache([slot]),
+            jnp.asarray([seq[-1]], jnp.int32),
+            jnp.asarray([len(seq) - 1], jnp.int32),
+            self.kv.table_rows([slot]), jnp.int32(sl),
+            n_steps=_bucket(sl, (1, 2, 4, 8, 16, 32, 64)))
+        self.kv.absorb([slot], cache)
+        self.kv.seq_len[slot] += sl
+        eng.counters["spec_draft_calls"] += 1
+        drafts = [int(t) for t in np.asarray(drafts_dev)[:sl]]
 
         # target verifies [last, drafts[:-1]] + drafts[-1] in one pass
         verify_in = [seq[-1]] + drafts
-        slot = eng.slots.slot_of[rid]
-        from repro.serving.engine import _bucket
         L = len(verify_in)
         Lp = _bucket(L)
+        tslot = eng.kv.seq_of[rid]
+        tpos = eng.kv.length(rid)
+        eng._reserve(rid, tpos + L)
         buf = np.zeros((1, Lp), np.int32)
         buf[0, :L] = verify_in
-        pos0 = eng.slots.pos[slot][None]
-        sub = eng.slots.gather([slot])
-        logits, sub = eng._fwd(eng.params, jnp.asarray(buf), sub, pos0,
-                               eng.reqs[rid].enc_states)
-        eng.slots.scatter([slot], sub)
-        eng.slots.pos = eng.slots.pos.at[slot].add(L)
-        target_toks = np.asarray(jnp.argmax(logits[0, :L], axis=-1))
+        ttoks, tcache = eng._verify(
+            eng.params, jnp.asarray(buf), eng.kv.lane_cache([tslot]),
+            jnp.asarray([tpos], jnp.int32), jnp.asarray([L], jnp.int32),
+            eng.kv.table_rows([tslot]), eng.reqs[rid].enc_states)
+        eng.kv.absorb([tslot], tcache)
+        eng.kv.seq_len[tslot] += L
+        eng.counters["spec_verify_calls"] += 1
+        target_toks = np.asarray(ttoks)[:L]
 
         accepted = 0
         while accepted < sl and int(target_toks[accepted]) == drafts[accepted]:
@@ -102,13 +164,12 @@ class SpecDecoder:
         # roll back target cache to the validated context
         eng.rollback(rid, sl - accepted)
         # roll back draft cache: valid prefix is seq + emitted[:-1]
-        dslot = self.slots.slot_of[rid]
-        dlen = int(self.slots.pos[dslot])
+        dlen = self.kv.length(rid)
         want = len(seq) + len(emitted) - 1
         if dlen > want:
-            self.slots.pos = self.slots.pos.at[dslot].add(want - dlen)
+            self.kv.truncate(rid, dlen - want)
         eng.reqs[rid].generated.extend(emitted)
         return emitted
 
     def release(self, rid: int) -> None:
-        self.slots.release(rid)
+        self.kv.release(rid)

@@ -1,0 +1,308 @@
+"""Paged-KV runtime: PagedKVManager bookkeeping invariants + token-for-token
+parity between the paged engine and the dense-slot reference execution
+(the seed engine's slot-contiguous cache path) at temperature 0."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.attention as attention
+from repro.configs import get_reduced
+from repro.core.batch import Batch
+from repro.core.slo import StageKind
+from repro.models import init_cache, init_params, logits_fn, model_forward
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.kvcache import PagedKVManager
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------ dense-slot reference -------------------------- #
+class DenseReference:
+    """The seed execution path: one slot-contiguous (1, max_len) cache,
+    chunked prefill + one forward per decode token, greedy sampling."""
+
+    def __init__(self, cfg, params, max_len=128):
+        self.cfg, self.params = cfg, params
+        self.cache = init_cache(cfg, 1, max_len)
+        self.pos = 0
+        self.moe_cf = (float(cfg.moe.n_experts) / cfg.moe.top_k
+                       if cfg.moe else None)
+
+    def _step(self, toks):
+        h, self.cache, _ = model_forward(
+            self.params, self.cfg, jnp.asarray([toks], jnp.int32),
+            cache=self.cache, pos0=jnp.asarray([self.pos], jnp.int32),
+            moe_cf=self.moe_cf)
+        self.pos += len(toks)
+        return logits_fn(self.params, self.cfg, h)
+
+    def prefill(self, chunk):
+        return int(jnp.argmax(self._step(chunk)[0, -1]))
+
+    def decode(self, last, n):
+        out = []
+        for _ in range(n):
+            last = int(jnp.argmax(self._step([last])[0, -1]))
+            out.append(last)
+        return out
+
+
+def make_engine(arch="smollm-135m", draft=False, **ecfg):
+    cfg = get_reduced(arch)
+    params = init_params(KEY, cfg)
+    draft_tuple = None
+    if draft:
+        import dataclasses
+        dcfg = dataclasses.replace(cfg, name=cfg.name + "-draft", n_layers=1,
+                                   block_pattern=("attn",))
+        draft_tuple = (dcfg, init_params(jax.random.PRNGKey(7), dcfg))
+    defaults = dict(max_slots=4, max_len=128, total_pages=64)
+    defaults.update(ecfg)
+    return cfg, params, ServingEngine(cfg, params, EngineConfig(**defaults),
+                                      draft=draft_tuple)
+
+
+# --------------------------- manager invariants -------------------------- #
+def check_consistent(kv: PagedKVManager):
+    """Free list + page tables partition the pool; device block tables
+    mirror the host tables (up to the per-seq table width)."""
+    held = [p for t in kv.tables.values() for p in t]
+    assert len(held) == len(set(held)), "page double-assigned"
+    assert sorted(held + kv.free) == list(range(kv.total_pages))
+    assert kv.used_pages == len(held)
+    bt = np.asarray(kv.block_tables)
+    for rid, pages in kv.tables.items():
+        if rid not in kv.seq_of:
+            continue
+        row = bt[kv.seq_of[rid]]
+        want = pages[:kv.max_pages_per_seq]
+        assert row[:len(want)].tolist() == want, (rid, row, pages)
+        assert (row[len(want):] == 0).all()
+
+
+def test_paged_manager_alloc_release_preempt():
+    cfg = get_reduced("smollm-135m")
+    kv = PagedKVManager(cfg, total_pages=32, page_size=16, max_seqs=4,
+                        max_len=256)
+    assert kv.admit(1, 100)                       # 7 pages
+    assert kv.admit(2, 40)                        # 3 pages
+    check_consistent(kv)
+    assert kv.used_pages == 10
+    assert kv.extend(1, 200)                      # grow to 13 pages
+    check_consistent(kv)
+    assert not kv.can_allocate(16 * 23)           # only 19 pages free
+
+    kv.seq_len[kv.seq_of[1]] = 100
+    kv.truncate(1, 30)                            # spec-decode rollback
+    assert kv.length(1) == 70
+    check_consistent(kv)                          # pages stay mapped
+
+    freed = kv.preempt(2)                         # victim: pages freed,
+    assert freed == 3                             # slot kept
+    assert kv.length(2) == 0
+    assert 2 in kv.seq_of
+    check_consistent(kv)
+    assert kv.allocate(2, 40) is not None         # re-admission
+    check_consistent(kv)
+
+    kv.release(1)
+    assert 1 not in kv.seq_of
+    check_consistent(kv)
+    assert kv.used_pages == 3
+
+
+def test_paged_manager_slot_exhaustion():
+    cfg = get_reduced("smollm-135m")
+    kv = PagedKVManager(cfg, total_pages=32, page_size=16, max_seqs=2,
+                        max_len=128)
+    assert kv.admit(1, 16) and kv.admit(2, 16)
+    assert not kv.admit(3, 16)                    # out of sequence slots
+    kv.release(1)
+    assert kv.admit(3, 16)
+    check_consistent(kv)
+
+
+# ------------------------------ parity ----------------------------------- #
+def test_paged_engine_matches_dense_reference():
+    """Chunked prefill (uneven splits) + multi-step fused decode must match
+    the dense-slot reference token-for-token at temperature 0."""
+    cfg, params, eng = make_engine()
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, 24).tolist()
+    ref = DenseReference(cfg, params)
+    want = [ref.prefill(prompt)]
+    want += ref.decode(want[-1], 7)
+
+    assert eng.add_request(1, prompt, expected_total=40)
+    got = []
+    b1 = Batch()
+    b1.add(1, StageKind.PREFILL, 10)              # uneven chunk split
+    got += eng.execute(b1).get(1, [])
+    b2 = Batch()
+    b2.add(1, StageKind.PREFILL, 14)
+    got += eng.execute(b2).get(1, [])
+    b = Batch()
+    b.add(1, StageKind.DECODE, 7)                 # one fused scan
+    got += eng.execute(b).get(1, [])
+    assert got == want, (got, want)
+
+
+def test_paged_engine_multi_request_parity():
+    cfg, params, eng = make_engine()
+    rng = np.random.default_rng(1)
+    prompts = {i: rng.integers(0, cfg.vocab, 12 + i).tolist()
+               for i in (1, 2, 3)}
+    wants = {}
+    for i, p in prompts.items():
+        ref = DenseReference(cfg, params)
+        first = ref.prefill(p)
+        wants[i] = [first] + ref.decode(first, 5)
+
+    gots = {i: [] for i in prompts}
+    for i, p in prompts.items():
+        assert eng.add_request(i, p, expected_total=32)
+        b = Batch()
+        b.add(i, StageKind.PREFILL, len(p))
+        gots[i] += eng.execute(b).get(i, [])
+    # mixed per-request step budgets in one fused batch, then the rest
+    b = Batch()
+    for i, n in ((1, 2), (2, 3), (3, 5)):
+        b.add(i, StageKind.DECODE, n)
+    out = eng.execute(b)
+    for i in prompts:
+        gots[i] += out.get(i, [])
+    for i, n in ((1, 3), (2, 2)):
+        b = Batch()
+        b.add(i, StageKind.DECODE, n)
+        gots[i] += eng.execute(b).get(i, [])
+    for i in prompts:
+        assert gots[i] == wants[i], i
+
+
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "zamba2-7b"])
+def test_ssm_unaligned_prefill_parity(arch):
+    """Bucket padding must not leak into SSM conv/ssd state: a 10-token
+    prompt (padded to 16) split into unaligned chunks has to match the
+    unpadded reference exactly."""
+    cfg, params, eng = make_engine(arch)
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab, 10).tolist()
+    ref = DenseReference(cfg, params)
+    first = ref.prefill(prompt)
+    want = [first] + ref.decode(first, 3)
+    assert eng.add_request(1, prompt, expected_total=32)
+    got = []
+    for n in (7, 3):                              # both chunks unaligned
+        b = Batch()
+        b.add(1, StageKind.PREFILL, n)
+        got += eng.execute(b).get(1, [])
+    b = Batch()
+    b.add(1, StageKind.DECODE, 3)
+    got += eng.execute(b).get(1, [])
+    assert got == want, (got, want)
+
+
+def test_spec_decode_rollback_parity():
+    """Draft+verify with paged rollback (length decrement) must emit
+    exactly the greedy sequence."""
+    cfg, params, eng = make_engine(draft=True)
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab, 16).tolist()
+    ref = DenseReference(cfg, params)
+    first = ref.prefill(prompt)
+    want = [first] + ref.decode(first, 9)
+    assert eng.add_request(1, prompt, expected_total=64)
+    b = Batch()
+    b.add(1, StageKind.PREFILL, 16)
+    got = eng.execute(b).get(1, [])
+    while len(got) < 10:
+        b = Batch(spec_step=3)
+        b.add(1, StageKind.DECODE, 4)
+        got += eng.execute(b).get(1, [])
+    assert got[:10] == want[:10], (got, want)
+
+
+def test_decode_group_is_one_device_call():
+    """The fused scan: N requested tokens -> exactly one jitted decode
+    computation (no per-token Python loop)."""
+    cfg, params, eng = make_engine()
+    prompt = list(range(1, 17))
+    assert eng.add_request(1, prompt, expected_total=48)
+    b = Batch()
+    b.add(1, StageKind.PREFILL, 16)
+    eng.execute(b)
+    assert eng.counters["decode_calls"] == 0
+    b = Batch()
+    b.add(1, StageKind.DECODE, 6)
+    out = eng.execute(b).get(1, [])
+    assert len(out) == 6
+    assert eng.counters["decode_calls"] == 1
+    assert eng.counters["decode_tokens"] == 6
+
+
+def test_decode_caps_at_page_budget():
+    """When the free list can't cover the full step budget the engine
+    emits what fits instead of crashing the serving loop."""
+    cfg, params, eng = make_engine(max_slots=2, max_len=64, total_pages=4)
+    assert eng.add_request(1, list(range(1, 17)), expected_total=17)
+    assert eng.add_request(2, list(range(1, 17)), expected_total=31)
+    b = Batch()
+    b.add(1, StageKind.PREFILL, 16)
+    eng.execute(b)
+    assert eng.kv.used_pages == 4                 # pool exhausted
+    b = Batch()
+    b.add(1, StageKind.DECODE, 60)                # asks far past capacity
+    out = eng.execute(b).get(1, [])
+    # rid 1 holds 2 pages (32 token slots), 16 already written
+    assert len(out) == 16, out
+    assert eng.kv.length(1) == 32
+
+
+def test_failed_prefill_keeps_prompt_retryable():
+    """An out-of-pages prefill must fail BEFORE consuming the pending
+    prompt tokens, so the request survives and can retry once pages
+    free up."""
+    cfg, params, eng = make_engine(max_slots=2, max_len=128, total_pages=4)
+    assert eng.add_request(1, list(range(1, 41)), expected_total=8)
+    assert eng.add_request(2, list(range(1, 17)), expected_total=48)
+    b = Batch()
+    b.add(1, StageKind.PREFILL, 40)               # needs 3 pages, has 1
+    with pytest.raises(RuntimeError):
+        eng.execute(b)
+    assert len(eng.reqs[1].pending) == 40         # prompt intact
+    assert eng.kv.length(1) == 0
+    eng.finish(2)                                 # frees pages
+    got = eng.execute(b).get(1, [])               # retry now succeeds
+    assert len(got) == 1
+
+
+def test_oversize_prompt_rejected_at_admission():
+    """A prompt that can't fit max_len must be declined up front (not
+    admitted, no pages held) instead of crashing mid-prefill."""
+    cfg, params, eng = make_engine(max_slots=2, max_len=64, total_pages=32)
+    assert not eng.add_request(1, list(range(1, 101)), expected_total=108)
+    assert eng.kv.used_pages == 0
+    assert not eng.kv.seq_of
+    # over-reserving pages for a fitting prompt is still fine (budget hint)
+    assert eng.add_request(2, list(range(1, 20)), expected_total=300)
+
+
+def test_paged_decode_backend_dispatch_parity():
+    """Forced Pallas (interpret) and pure-JAX gather backends agree."""
+    def run(impl):
+        attention.PAGED_DECODE_IMPL = impl
+        try:
+            cfg, params, eng = make_engine()
+            prompt = list(range(5, 17))
+            assert eng.add_request(1, prompt, expected_total=32)
+            b = Batch()
+            b.add(1, StageKind.PREFILL, len(prompt))
+            got = eng.execute(b).get(1, [])
+            b = Batch()
+            b.add(1, StageKind.DECODE, 2)
+            got += eng.execute(b).get(1, [])
+            return got
+        finally:
+            attention.PAGED_DECODE_IMPL = "auto"
+    assert run("gather") == run("pallas")

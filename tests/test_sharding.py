@@ -6,8 +6,8 @@ from jax.sharding import AbstractMesh, PartitionSpec as P
 from repro.configs import get_config
 from repro.distributed.sharding import _fit, batch_spec, param_spec
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-POD_MESH = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = AbstractMesh((("data", 16), ("model", 16)))
+POD_MESH = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 def test_fit_drops_indivisible_axes():
