@@ -3,10 +3,8 @@ from __future__ import annotations
 
 import time
 
-from repro.core.perf_model import A100_40G, opt_perf_model
+from repro.core.perf_model import opt_perf_model
 from repro.core.router import make_baseline_cluster, make_slos_serve_cluster
-from repro.core.simulator import find_capacity
-from repro.core.workload import SCENARIOS, generate_workload
 
 PERF = opt_perf_model(7e9)
 PERF_SPEC = opt_perf_model(7e9, spec=True)
@@ -21,7 +19,6 @@ def system_factory(kind: str, n_replicas: int = 1, spec_alpha=0.7):
         return lambda: make_slos_serve_cluster(n_replicas, PERF,
                                                spec_alpha=None)
     if kind == "ours-nobe":
-        import dataclasses
         from repro.core.simulator import SimConfig
         return lambda: make_slos_serve_cluster(
             n_replicas, PERF, spec_alpha=None,

@@ -1,17 +1,31 @@
 """Multi-replica serving with SLO-driven request routing (paper §4.2).
 
-Four virtualized replicas behind the centralized controller; a bursty Coder
-workload is routed sequentially when a replica's scheduler declines, with
-the best-effort tier as the final backstop.
+The same story told twice:
+  1. the virtualized event simulator (``ClusterSim``) at paper-scale
+     lengths — four replicas behind the centralized controller;
+  2. the REAL cluster runtime (``ClusterFrontend``): two JAX engine
+     replicas on smollm-135m-scale random weights executing every token,
+     with SLO-verdict routing, a shared page budget, best-effort demotion
+     and page-pressure preemption.
 
   PYTHONPATH=src python examples/multi_replica.py
 """
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
 from repro.core import opt_perf_model
-from repro.core.router import make_slos_serve_cluster
-from repro.core.workload import generate_workload
+from repro.core.perf_model import cpu_scale_perf_model
+from repro.core.request import simple_request
+from repro.core.router import (RoutingPolicy, make_real_cluster,
+                               make_slos_serve_cluster)
+from repro.core.scheduler import SchedulerConfig
+from repro.core.workload import bursty_arrivals, generate_workload
+from repro.models import init_params
 
 perf = opt_perf_model(7e9)
 
+print("== virtualized cluster (event simulator, paper-scale lengths) ==")
 for n in (1, 4):
     sim = make_slos_serve_cluster(n, perf)
     reqs = generate_workload("coder", 4.0 * n, 40.0, seed=7)
@@ -21,3 +35,27 @@ for n in (1, 4):
           f"attainment={res.attainment:.2%}  routed={routed}  "
           f"best-effort={res.n_best_effort}  "
           f"preemptions={res.n_preemptions}")
+
+print()
+print("== real cluster (2 JAX engine replicas, token-by-token) ==")
+VIRT = cpu_scale_perf_model()
+cfg = get_reduced("smollm-135m")
+params = init_params(jax.random.PRNGKey(0), cfg)
+cluster = make_real_cluster(
+    2, cfg, params, VIRT,
+    policy=RoutingPolicy(max_hops=1),
+    total_pages=32, replica_pages=16, page_size=4, max_slots=8, max_len=64,
+    sched_cfg=SchedulerConfig(page_size=4, prefill_emits_first_token=True))
+rng = np.random.default_rng(7)
+times = bursty_arrivals(3.0, 6.0, rng, burst_factor=4.0, burst_frac=0.25,
+                        period=6.0)
+for i, t in enumerate(times):
+    cluster.submit(simple_request(
+        i, float(t), prompt=int(rng.integers(14, 26)),
+        output=int(rng.integers(8, 16)), ttft_slowdown=8.0, tpot=0.15))
+stats = cluster.run_until_idle()
+print(f"2 replicas: {stats.submitted} reqs (bursty)  "
+      f"served={stats.served}  attained={stats.attained}  "
+      f"routed={stats.routed}  best-effort={stats.best_effort}  "
+      f"preemptions={stats.preempted}  tokens={stats.tokens_out}")
+assert cluster.budget.used == 0, "page budget must drain to zero"

@@ -41,4 +41,4 @@ while len(out) < 20:
 
 print(f"\n{len(out)} tokens in {verifies} verifies "
       f"({len(out) / verifies:.2f} tokens/verify vs 1.0 autoregressive); "
-      f"each verify = 2 device calls (scanned draft + verify) on paged KV")
+      "each verify = 2 device calls (scanned draft + verify) on paged KV")

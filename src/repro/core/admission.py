@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
 
 from repro.core.request import Request, RequestState
 from repro.core.slo import StageKind

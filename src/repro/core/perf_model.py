@@ -172,3 +172,12 @@ def opt_perf_model(n_params: float, hw: HardwareSpec = A100_40G,
     return PerfModel.from_roofline(
         n_params_active=n_params, weight_bytes=2.0 * n_params, hw=hw,
         n_chips=n_chips, spec_params=spec_params)
+
+
+def cpu_scale_perf_model() -> PerfModel:
+    """Virtual-chip model scaled to CPU-miniaturized request lengths
+    (~200 tok/s with a 20 ms weight-read floor) so TTFT/TPOT SLOs stay
+    meaningful when a real reduced-config engine executes shrunken
+    requests.  Single source of truth for launch/serve.py, the cluster
+    example/benchmark, and the frontend/cluster tests."""
+    return PerfModel(terms=((5e-3, 0.0, 1e-3), (5e-4, 0.0, 2e-2)))

@@ -10,7 +10,7 @@ import dataclasses
 import enum
 from typing import Optional
 
-from repro.core.slo import StageKind, StageSpec, StageSLO, TPOT_WINDOW
+from repro.core.slo import StageKind, StageSpec, TPOT_WINDOW
 
 
 class ServiceTier(enum.Enum):
@@ -132,7 +132,6 @@ class Request:
         """A request's SLO is attained iff every stage's SLO is satisfied."""
         if not self.finished:
             return False
-        prefill_i = 0
         stage_start = self.arrival
         tok_cursor = 0
         for idx, s in enumerate(self.stages):
@@ -141,7 +140,6 @@ class Request:
                 limit = s.slo.ttft_slowdown * zero_load_time_fn(s.length)
                 if end - stage_start > limit + 1e-9:
                     return False
-                prefill_i += 1
             else:
                 times = self.token_times[tok_cursor:tok_cursor + s.length]
                 tok_cursor += s.length

@@ -6,8 +6,10 @@ arrival the target replica's scheduler decides SLO attainability; requests
 it declines are routed sequentially to the next replica, and after
 ``max_route_hops`` a backup policy fires (best-effort tier or decline).
 
-The event-level mechanics live in ``simulator.ClusterSim``; this module
-provides the configuration and the factory used by benchmarks/examples.
+The event-level mechanics live in ``simulator.ClusterSim``; the REAL
+token-by-token counterpart is ``serving/cluster.ClusterFrontend``.  Both
+share the ``RoutingPolicy`` type defined here, and this module provides
+the factories used by benchmarks/examples for either path.
 """
 from __future__ import annotations
 
@@ -45,6 +47,18 @@ def make_slos_serve_cluster(n_replicas: int, perf: PerfModel,
         cfg = dataclasses.replace(cfg, spec_alpha=spec_alpha)
         scheds.append(SLOsServeScheduler(perf, cfg))
     return ClusterSim(scheds, perf, sim_cfg)
+
+
+def make_real_cluster(n_replicas: int, model_cfg, params, perf: PerfModel,
+                      policy: RoutingPolicy = None, **kw):
+    """Real-execution counterpart of ``make_slos_serve_cluster``: N JAX
+    ``ServingEngine`` replicas behind the SLO-routed ``ClusterFrontend``,
+    sharing one page budget (serving/cluster.py).  Imported lazily so the
+    simulator-side core package stays importable without the serving
+    stack."""
+    from repro.serving.cluster import ClusterFrontend
+    return ClusterFrontend.build(model_cfg, params, n_replicas, perf,
+                                 policy=policy, **kw)
 
 
 def make_baseline_cluster(kind: str, n_replicas: int, perf: PerfModel,

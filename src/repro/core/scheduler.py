@@ -84,7 +84,10 @@ class SLOsServeScheduler:
 
     # ------------------------------------------------------------------ #
     def plan(self, now: float, running: list[Request], new: list[Request],
-             mem_free: int) -> PlanResult:
+             mem_free: int, admission_only: bool = False) -> PlanResult:
+        """One scheduler invocation.  ``admission_only`` skips the batch
+        materialization (Algorithm 2) — routing verdicts (§4.2) only need
+        the DP's admit/decline decision, not the batch timeline."""
         cfg = self.cfg
         new = sorted(new, key=lambda r: r.arrival)
         deferred = new[cfg.max_new_per_plan:]
@@ -162,7 +165,7 @@ class SLOsServeScheduler:
         forced_kept = [c.req for c in res.declined if c.forced]
         admitted += forced_kept
 
-        batches = self._materialize(
+        batches = [] if admission_only else self._materialize(
             res.accepted + [c for c in res.declined if c.forced],
             decode_jobs, tiers)
         return PlanResult(admitted=[r for r in admitted

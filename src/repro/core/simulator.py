@@ -36,7 +36,7 @@ from repro.core.admission import BestEffortQueue
 from repro.core.batch import Batch
 from repro.core.perf_model import PerfModel
 from repro.core.request import Request, RequestState
-from repro.core.scheduler import SLOsServeScheduler, PlanResult
+from repro.core.scheduler import PlanResult
 from repro.core.slo import StageKind
 
 

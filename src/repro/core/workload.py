@@ -118,7 +118,6 @@ def _toolllm(rid, t, rng) -> Request:
     n_pairs = int(np.clip(round(rng.normal(2.7, 1.1)), 1, 6))
     stages = []
     for k in range(n_pairs):
-        first = k == 0
         last = k == n_pairs - 1
         stages.append(StageSpec(
             prefill_slo(TIGHT_TTFT_SLOWDOWN), int(d["prompt"].sample(rng))))

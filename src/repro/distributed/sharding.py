@@ -15,7 +15,6 @@ frameworks (MaxText et al.) express logical-axis rules.
 from __future__ import annotations
 
 import re
-from typing import Optional
 
 import jax
 import numpy as np

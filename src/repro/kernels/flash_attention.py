@@ -13,7 +13,6 @@ longer KV context, and ``kv_len`` masks the valid cache prefix.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -17,16 +17,14 @@ import argparse
 import jax
 
 from repro.configs import get_reduced
-from repro.core.perf_model import PerfModel
+from repro.core.perf_model import cpu_scale_perf_model
 from repro.core.scheduler import SchedulerConfig, SLOsServeScheduler
 from repro.core.workload import generate_workload
 from repro.models import init_encdec_params, init_params
 from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.frontend import ServingFrontend
 
-# Virtual-chip model scaled to the shrunken request lengths (~200 tok/s
-# with a 20 ms weight-read floor) so TTFT/TPOT SLOs stay meaningful.
-VIRTUAL_PERF = PerfModel(terms=((5e-3, 0.0, 1e-3), (5e-4, 0.0, 2e-2)))
+VIRTUAL_PERF = cpu_scale_perf_model()
 
 
 def main():

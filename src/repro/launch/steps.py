@@ -13,9 +13,7 @@ straight to ``jit(...).lower()`` in dryrun.py.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -206,7 +206,6 @@ class ModelConfig:
     def kv_bytes_per_token(self, dtype_bytes: int = 2) -> int:
         """KV-cache (or SSM state amortization ~ 0) bytes per token."""
         total = 0
-        shared_counted = False
         for kind in self.block_pattern:
             if kind in ("attn", "attn_moe", "cross_attn"):
                 total += 2 * self.n_kv_heads * self.head_dim * dtype_bytes

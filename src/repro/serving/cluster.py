@@ -1,0 +1,214 @@
+"""Real multi-replica cluster runtime (paper §4.2, Fig. 7): an SLO-routed
+engine pool with page-pressure preemption.
+
+``ClusterFrontend`` owns N REAL replicas — each a ``ServingEngine`` +
+``SLOsServeScheduler`` behind a ``ReplicaDriver`` — with per-replica paged
+KV pools carved from ONE ``SharedPageBudget``.  It performs dynamic request
+routing: on arrival each candidate replica's DP scheduler renders an
+SLO-attainability verdict (``ReplicaDriver.verdict``); declines route
+sequentially to the next replica up to ``RoutingPolicy.max_hops``, after
+which the backup policy fires (best-effort tier or decline).  The policy
+type is shared with the simulator (``core/router.RoutingPolicy``) so
+``ClusterSim`` and the real cluster are driven by one configuration.
+
+Page-pressure resilience is end-to-end on real engines: when admission or
+a decode-step reservation exhausts a replica's pool, the driver preempts
+best-effort victims (``PagedKVManager.preempt`` frees their device pages)
+and the victims later replay a recompute prefill — the §4.1 mechanics, but
+with every token executed by the model.
+
+Replicas advance in virtual lockstep: each ``step`` routes due arrivals,
+drives every replica once from the shared clock, and advances the clock by
+the longest replica's virtual elapsed time (replicas run concurrently in
+wall-time; the §4.2 routing delay is below this step granularity).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.perf_model import PerfModel
+from repro.core.request import Request
+from repro.core.router import RoutingPolicy
+from repro.core.scheduler import SchedulerConfig, SLOsServeScheduler
+from repro.models.config import ModelConfig
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.frontend import ReplicaDriver
+from repro.serving.kvcache import SharedPageBudget
+
+
+@dataclasses.dataclass
+class ClusterStats:
+    submitted: int = 0
+    served: int = 0          # terminal outcomes (finished + dropped)
+    attained: int = 0
+    dropped: int = 0
+    routed: int = 0          # requests served away from their first choice
+    best_effort: int = 0     # requests demoted to the best-effort tier
+    preempted: int = 0       # real PagedKVManager.preempt invocations
+    tokens_out: int = 0
+
+
+@dataclasses.dataclass
+class _Payload:
+    req: Request
+    prompt: Optional[list]
+    on_token: Optional[Callable]
+    enc_states: object
+    start: int = 0           # round-robin first-choice replica
+
+
+class ClusterFrontend:
+    def __init__(self, drivers: list[ReplicaDriver],
+                 policy: RoutingPolicy = None, seed: int = 0):
+        self.drivers = drivers
+        self.policy = policy or RoutingPolicy()
+        self.rng = np.random.default_rng(seed)
+        self.budget: Optional[SharedPageBudget] = None
+        self.clock = 0.0
+        self.pending: list[_Payload] = []
+        self.payloads: dict[int, _Payload] = {}
+        self._rr = 0
+        self._routed: set[int] = set()
+        self._submitted = 0
+        self._dropped = 0
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def build(cls, model_cfg: ModelConfig, params, n_replicas: int,
+              perf: PerfModel, *, sched_cfg: SchedulerConfig = None,
+              policy: RoutingPolicy = None, total_pages: int = 256,
+              replica_pages: int = None, page_size: int = 16,
+              max_slots: int = 8, max_len: int = 256, dtype=jnp.float32,
+              seed: int = 0, draft: Optional[tuple] = None
+              ) -> "ClusterFrontend":
+        """Carve ``total_pages`` (one shared budget) into per-replica paged
+        KV pools and stand up N real engines over shared ``params``.
+        ``replica_pages`` defaults to an even split; setting it higher lets
+        an idle-neighbor replica borrow budget (its physical pool exceeds
+        its fair share, the SharedPageBudget caps the aggregate)."""
+        budget = SharedPageBudget(total_pages)
+        if replica_pages is None:
+            replica_pages = max(1, total_pages // n_replicas)
+        drivers = []
+        for i in range(n_replicas):
+            eng = ServingEngine(
+                model_cfg, params,
+                EngineConfig(max_slots=max_slots, max_len=max_len,
+                             page_size=page_size, total_pages=replica_pages,
+                             dtype=dtype, seed=seed + i),
+                draft=draft, kv_budget=budget)
+            cfg = sched_cfg or SchedulerConfig(
+                page_size=page_size, prefill_emits_first_token=True)
+            drivers.append(ReplicaDriver(eng, SLOsServeScheduler(perf, cfg),
+                                         idx=i, seed=seed + i))
+        cluster = cls(drivers, policy=policy, seed=seed)
+        cluster.budget = budget
+        return cluster
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request, prompt: Optional[list] = None,
+               on_token: Optional[Callable] = None, enc_states=None) -> None:
+        """Queue a request for routing at its arrival time."""
+        p = _Payload(req, prompt, on_token, enc_states)
+        self.payloads[req.rid] = p
+        self.pending.append(p)
+        self._submitted += 1
+
+    @property
+    def idle(self) -> bool:
+        return not self.pending and all(d.idle for d in self.drivers)
+
+    @property
+    def stats(self) -> ClusterStats:
+        s = ClusterStats(submitted=self._submitted, dropped=self._dropped,
+                         served=self._dropped, routed=len(self._routed))
+        for d in self.drivers:
+            s.served += d.stats.served
+            s.attained += d.stats.attained
+            s.dropped += d.stats.dropped
+            s.best_effort += d.stats.best_effort
+            s.tokens_out += d.stats.tokens_out
+            s.preempted += d.engine.counters["preemptions"]
+        return s
+
+    # ----------------------------- routing ----------------------------- #
+    def _route(self, p: _Payload, now: float) -> None:
+        """§4.2 sequential routing: try replicas in round-robin order from
+        the request's first choice; every decline consumes one hop, and the
+        backup policy fires once the hop limit is exhausted."""
+        req = p.req
+        n = len(self.drivers)
+        while req.routing_hops <= self.policy.max_hops:
+            d = self.drivers[(p.start + req.routing_hops) % n]
+            if d.verdict(now, req):
+                if req.routing_hops > 0:
+                    self._routed.add(req.rid)
+                d.enqueue(req, p.prompt, p.on_token, p.enc_states)
+                p.prompt = d.prompts[req.rid]   # pin the generated prompt
+                return
+            req.routing_hops += 1
+        if self.policy.backup == "best_effort":
+            d = min(self.drivers, key=lambda x: len(x.be))
+            d.enqueue(req, p.prompt, p.on_token, p.enc_states,
+                      best_effort=True)
+            p.prompt = d.prompts[req.rid]
+        else:
+            self._dropped += 1
+            self.payloads.pop(req.rid, None)
+
+    # ------------------------------------------------------------------ #
+    def step(self, max_batches: int = 8) -> int:
+        """Route due arrivals, drive every replica once, advance the
+        shared clock.  Returns total engine batches executed."""
+        now = self.clock
+        arrivals = [p for p in self.pending if p.req.arrival <= now]
+        self.pending = [p for p in self.pending if p.req.arrival > now]
+        for p in arrivals:
+            p.start = self._rr % len(self.drivers)
+            self._rr += 1
+            self._route(p, now)
+        n_exec = 0
+        elapsed = 0.0
+        declined: list[tuple[ReplicaDriver, Request]] = []
+        for d in self.drivers:
+            r = d.drive(now, max_batches)
+            n_exec += r.n_exec
+            elapsed = max(elapsed, r.elapsed)
+            declined.extend((d, q) for q in r.declined)
+        for d, q in declined:
+            d.forget(q.rid)
+            q.routing_hops += 1
+            p = self.payloads.get(q.rid)
+            if p is not None:
+                self._route(p, now)
+        # prune payloads of requests that reached a terminal state (their
+        # driver forgot them) so long-running clusters don't accumulate
+        # prompt lists and stream closures without bound
+        live = {p.req.rid for p in self.pending}
+        for d in self.drivers:
+            live.update(d.prompts.keys())
+        self.payloads = {rid: p for rid, p in self.payloads.items()
+                         if rid in live}
+        if n_exec:
+            self.clock = now + elapsed
+        else:
+            nxt = min((p.req.arrival for p in self.pending),
+                      default=now + 0.1)
+            for d in self.drivers:
+                a = d.next_arrival()
+                if a is not None:
+                    nxt = min(nxt, a)
+            self.clock = max(now + 0.05, nxt)
+        return n_exec
+
+    # ------------------------------------------------------------------ #
+    def run_until_idle(self, max_steps: int = 10_000) -> ClusterStats:
+        for _ in range(max_steps):
+            if self.idle:
+                break
+            self.step()
+        return self.stats

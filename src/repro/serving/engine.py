@@ -67,11 +67,20 @@ class RequestCtx:
     eos: Optional[int] = None
     done: bool = False
     enc_states: Optional[object] = None   # VLM / enc-dec conditioning
+    # Preemption bookkeeping: ``history`` mirrors the KV cache content (the
+    # exact tokens whose embeddings the pages hold), so a preempted request
+    # can re-prefill it verbatim.  ``replay`` counts pending tokens that are
+    # recompute work (not fresh request progress); ``recompute`` suppresses
+    # the one prefill-completion emission that would re-sample an already
+    # emitted token.
+    history: list = dataclasses.field(default_factory=list)
+    replay: int = 0
+    recompute: bool = False
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig = None,
-                 draft: Optional[tuple] = None):
+                 draft: Optional[tuple] = None, kv_budget=None):
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg or EngineConfig()
@@ -79,7 +88,8 @@ class ServingEngine:
                                  page_size=self.ecfg.page_size,
                                  max_seqs=self.ecfg.max_slots,
                                  max_len=self.ecfg.max_len,
-                                 dtype=self.ecfg.dtype)
+                                 dtype=self.ecfg.dtype,
+                                 budget=kv_budget)
         self.reqs: dict[int, RequestCtx] = {}
         self.key = jax.random.PRNGKey(self.ecfg.seed)
         self._moe_cf = (float(cfg.moe.n_experts) / cfg.moe.top_k
@@ -93,7 +103,12 @@ class ServingEngine:
         self._verify = jax.jit(self._verify_forward, donate_argnums=(2,))
         self.counters = {"prefill_calls": 0, "decode_calls": 0,
                          "decode_tokens": 0, "spec_draft_calls": 0,
-                         "spec_verify_calls": 0}
+                         "spec_verify_calls": 0, "preemptions": 0}
+        # fresh (non-replay) prefill tokens consumed per rid in the last
+        # execute() call — the frontend's source of truth for request-level
+        # prefill progress (recompute prefill after preemption is engine
+        # work, not request progress)
+        self.last_prefill_progress: dict[int, int] = {}
         # speculative decoding: (draft_cfg, draft_params)
         self.spec = None
         if draft is not None:
@@ -102,16 +117,21 @@ class ServingEngine:
 
     # ------------------------- jitted programs -------------------------- #
     def _prefill_forward(self, params, tokens, cache, pos0, true_len, bt,
-                         enc_states, key):
-        """One chunk: write KV into pages, return the token sampled at the
-        last REAL position (position true_len-1 of the padded chunk)."""
+                         enc_states, keys):
+        """One lane-batched chunk group: each lane writes its chunk's KV
+        into its own pages (per-lane block tables) and samples the token at
+        its last REAL position (true_len-1 of the padded chunk).  Padded
+        lanes carry true_len 0: their writes drop and output is ignored."""
         h, cache, _ = model_forward(params, self.cfg, tokens, cache=cache,
                                     pos0=pos0, enc_states=enc_states,
                                     moe_cf=self._moe_cf, block_tables=bt,
                                     chunk_len=true_len)
         logits = logits_fn(params, self.cfg, h)
-        last = jnp.take(logits[0], true_len[0] - 1, axis=0)
-        return sample(last, key, self.ecfg.temperature), cache
+        idx = jnp.maximum(true_len - 1, 0)
+        last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+        toks = jax.vmap(
+            lambda lg, k: sample(lg, k, self.ecfg.temperature))(last, keys)
+        return toks, cache
 
     def _verify_forward(self, params, tokens, cache, pos0, true_len, bt,
                         enc_states):
@@ -185,6 +205,55 @@ class ServingEngine:
             self.spec.release(rid)
         self.reqs.pop(rid, None)
 
+    # --------------------- preemption / re-admission -------------------- #
+    def preempt(self, rid: int) -> int:
+        """Victimize a request (§4.1): free its device pages NOW while
+        keeping the request context and its sequence slot.  The discarded
+        KV is reconstructed later by re-prefilling ``history`` — the exact
+        tokens the cache held — so a request preempted mid-decode resumes
+        with an identical greedy token stream.  Returns pages freed."""
+        ctx = self.reqs.get(rid)
+        if ctx is None:
+            return 0
+        freed = self.kv.preempt(rid)
+        if self.spec is not None:
+            self.spec.release(rid)      # draft cache re-syncs on resume
+        ctx.recompute = ctx.recompute or (bool(ctx.generated)
+                                          and not ctx.pending)
+        ctx.replay += len(ctx.history)
+        ctx.pending = ctx.history + ctx.pending
+        ctx.history = []
+        self.counters["preemptions"] += 1
+        return freed
+
+    def readmit(self, rid: int, expected_total: int) -> bool:
+        """Re-reserve pages for a preempted request's recompute context
+        (``preempt`` kept its slot); False while the pool is still short."""
+        if rid not in self.reqs or rid not in self.kv.seq_of:
+            return False
+        return self.kv.extend(rid, expected_total)
+
+    def drop(self, rid: int):
+        """Fully evict a request — pages AND sequence slot — returning its
+        context so the frontend can stash it and ``restore`` it later
+        (slot-pressure eviction of preempted best-effort victims)."""
+        self.kv.release(rid)
+        if self.spec is not None:
+            self.spec.release(rid)
+        return self.reqs.pop(rid, None)
+
+    def restore(self, rid: int, ctx: RequestCtx,
+                expected_total: int) -> bool:
+        """Re-admit a context evicted by ``drop``: a fresh slot + pages for
+        its recompute prefill; generated tokens and replay accounting carry
+        over so the stream continues where it left off."""
+        if len(ctx.pending) > self.ecfg.max_len:
+            return False
+        if not self.kv.admit(rid, expected_total):
+            return False
+        self.reqs[rid] = ctx
+        return True
+
     def context_len(self, rid: int) -> int:
         return self.kv.length(rid)
 
@@ -194,77 +263,146 @@ class ServingEngine:
         if n_tokens:
             self.kv.truncate(rid, n_tokens)
 
-    def _reserve(self, rid: int, new_total: int) -> None:
+    def _reserve(self, rid: int, new_total: int, on_pressure=None) -> None:
         if new_total > self.ecfg.max_len:
             raise RuntimeError(
                 f"request {rid}: context {new_total} exceeds max_len "
                 f"{self.ecfg.max_len}")
-        if not self.kv.extend(rid, new_total):
-            raise RuntimeError(f"request {rid}: out of KV pages")
+        if self.kv.extend(rid, new_total):
+            return
+        if on_pressure is not None:
+            # page exhaustion: let the frontend preempt best-effort
+            # victims (frees real device pages), then retry once
+            short = (self.kv.pages_needed(new_total)
+                     - len(self.kv.tables.get(rid, []))
+                     - self.kv.free_pages)
+            on_pressure(max(short, 1))
+            if self.kv.extend(rid, new_total):
+                return
+        raise RuntimeError(f"request {rid}: out of KV pages")
 
     # ------------------------------------------------------------------ #
-    def execute(self, batch: Batch) -> dict[int, list]:
-        """Run one planner batch; returns {rid: emitted tokens}."""
+    def execute(self, batch: Batch, on_pressure=None) -> dict[int, list]:
+        """Run one planner batch; returns {rid: emitted tokens}.
+
+        ``on_pressure(pages_short)`` is an optional callback fired when a
+        page reservation cannot be satisfied; the frontend uses it to
+        preempt best-effort victims (freeing real device pages) before the
+        engine retries — failing that, prefill raises and decode caps its
+        step budget, exactly as without the callback."""
         emitted: dict[int, list] = {}
+        self.last_prefill_progress = {}
+        prefills = []
         decode_rids = []
         for e in batch.entries:
             if e.rid not in self.reqs:
                 continue
             if e.kind == StageKind.PREFILL:
-                first = self._prefill_chunk(e.rid, e.n_tokens)
-                emitted.setdefault(e.rid, []).extend(first)
+                prefills.append((e.rid, e.n_tokens))
             else:
                 decode_rids.append((e.rid, e.n_tokens))
+        for group in self._group_prefills(prefills, on_pressure):
+            for rid, toks in self._prefill_group(*group).items():
+                emitted.setdefault(rid, []).extend(toks)
         if decode_rids:
             if batch.spec_step > 0 and self.spec is not None:
                 for rid, n in decode_rids:
                     emitted.setdefault(rid, []).extend(
                         self.spec.decode(rid, n))
             else:
-                out = self._decode_batched(dict(decode_rids))
+                out = self._decode_batched(dict(decode_rids), on_pressure)
                 for rid, toks in out.items():
                     emitted.setdefault(rid, []).extend(toks)
         return emitted
 
     # ------------------------------------------------------------------ #
-    def _prefill_chunk(self, rid: int, n_tokens: int) -> list:
-        ctx = self.reqs[rid]
-        chunk = ctx.pending[:n_tokens]
-        if not chunk:
-            return []
-        slot = self.kv.seq_of[rid]
-        pos = self.kv.length(rid)
-        L = len(chunk)
-        self._reserve(rid, pos + L)      # before consuming pending: a
-        ctx.pending = ctx.pending[n_tokens:]   # failed reserve keeps the
-        Lp = _bucket(L)                        # prompt tokens retryable
-        toks = np.zeros((1, Lp), np.int32)
-        toks[0, :L] = chunk
-        cache = self.kv.lane_cache([slot])
-        if ctx.pending:
-            # mid-prompt chunk: the sampled token is discarded, so don't
-            # advance the RNG stream — temperature>0 output must not
-            # depend on how the planner split the prefill
-            sk = jax.random.PRNGKey(0)
-        else:
-            self.key, sk = jax.random.split(self.key)
+    def _group_prefills(self, entries, on_pressure=None):
+        """Two-phase chunk intake: reserve pages for EVERY chunk first (a
+        failed reservation raises before any pending tokens are consumed,
+        keeping every prompt retryable), then consume the chunks and group
+        same-bucket ones for lane-batched execution."""
+        recs = []
+        for rid, n in entries:
+            ctx = self.reqs[rid]
+            L = min(n, len(ctx.pending))
+            if L <= 0:
+                continue
+            pos = self.kv.length(rid)
+            self._reserve(rid, pos + L, on_pressure)
+            recs.append((rid, ctx.pending[:L], pos))
+        for rid, chunk, _ in recs:
+            self.reqs[rid].pending = self.reqs[rid].pending[len(chunk):]
+        groups: dict = {}
+        for rec in recs:
+            rid, chunk, _ = rec
+            key = (_bucket(len(chunk)),
+                   self.reqs[rid].enc_states is not None)
+            groups.setdefault(key, []).append(rec)
+        out = []
+        for (Lp, _), g in groups.items():
+            for i in range(0, len(g), 8):       # cap lane fan-out per call
+                out.append((Lp, g[i:i + 8]))
+        return out
+
+    def _prefill_group(self, Lp: int, recs) -> dict[int, list]:
+        """One lane-batched prefill forward for same-bucket chunks from
+        different requests (per-lane block tables address each request's
+        own pages): ONE jitted device call for the whole group."""
+        rids = [rid for rid, _, _ in recs]
+        slots = [self.kv.seq_of[r] for r in rids]
+        B = _bucket(len(recs), (1, 2, 4, 8))
+        pad = B - len(recs)
+        slots_p = slots + [slots[0]] * pad
+        toks = np.zeros((B, Lp), np.int32)
+        true_len = np.zeros((B,), np.int32)
+        pos0 = np.zeros((B,), np.int32)
+        keys = []
+        for i, (rid, chunk, pos) in enumerate(recs):
+            toks[i, :len(chunk)] = chunk
+            true_len[i] = len(chunk)
+            pos0[i] = pos
+            ctx = self.reqs[rid]
+            if ctx.pending or ctx.recompute:
+                # the sampled token will be discarded: don't advance the
+                # RNG stream — temperature>0 output must not depend on how
+                # the planner split the prefill (or on preemption replay)
+                keys.append(jax.random.PRNGKey(0))
+            else:
+                self.key, sk = jax.random.split(self.key)
+                keys.append(sk)
+        keys += [jax.random.PRNGKey(0)] * pad
+        cache = self.kv.lane_cache(slots_p)
         tok, cache = self._prefill(
-            self.params, jnp.asarray(toks), cache,
-            jnp.asarray([pos], jnp.int32), jnp.asarray([L], jnp.int32),
-            self.kv.table_rows([slot]), ctx.enc_states, sk)
-        self.kv.absorb([slot], cache)
-        self.kv.seq_len[slot] += L
+            self.params, jnp.asarray(toks), cache, jnp.asarray(pos0),
+            jnp.asarray(true_len), self.kv.table_rows(slots_p),
+            self._gather_enc(rids, B), jnp.stack(keys))
+        self.kv.absorb(slots, cache)
         self.counters["prefill_calls"] += 1
-        if not ctx.pending:
-            # prefill complete: the last position's logits yield the first
-            # output token (TTFT = time-to-FIRST-token)
-            t = int(tok)
-            ctx.generated.append(t)
-            return [t]
-        return []
+        tok_h = np.asarray(tok)
+        out: dict[int, list] = {}
+        for i, (rid, chunk, _) in enumerate(recs):
+            ctx = self.reqs[rid]
+            self.kv.seq_len[slots[i]] += len(chunk)
+            replayed = min(len(chunk), ctx.replay)
+            ctx.replay -= replayed
+            self.last_prefill_progress[rid] = len(chunk) - replayed
+            ctx.history.extend(chunk)
+            if not ctx.pending:
+                if ctx.recompute:
+                    # recompute after preemption: the cache is restored
+                    # exactly; the next decode input is the last generated
+                    # token, so this re-sampled emission is discarded
+                    ctx.recompute = False
+                else:
+                    # prefill complete: the last position's logits yield
+                    # the first output token (TTFT = time-to-FIRST-token)
+                    t = int(tok_h[i])
+                    ctx.generated.append(t)
+                    out[rid] = [t]
+        return out
 
     # ------------------------------------------------------------------ #
-    def _decode_batched(self, steps_of) -> dict[int, list]:
+    def _decode_batched(self, steps_of, on_pressure=None) -> dict[int, list]:
         """steps_of: {rid: n_steps} or list of rids (1 step each).  One
         jitted device computation for the whole group."""
         if not isinstance(steps_of, dict):
@@ -275,6 +413,19 @@ class ServingEngine:
                 and steps_of[r] > 0]
         if not live:
             return out
+        if on_pressure is not None:
+            # decode-step reservation against page exhaustion: report the
+            # shortfall so the frontend can preempt best-effort victims
+            # before the capping below trims the step budget
+            need = 0
+            for r in live:
+                want = min(self.kv.length(r) + steps_of[r],
+                           self.ecfg.max_len)
+                need += max(0, self.kv.pages_needed(want)
+                            - len(self.kv.tables.get(r, [])))
+            short = need - self.kv.free_pages
+            if short > 0:
+                on_pressure(short)
         # Cap each lane's budget to the pages/context actually available
         # (sequential: earlier lanes claim free pages first) rather than
         # crashing the serving loop mid-stream; the planner sees the
@@ -298,8 +449,8 @@ class ServingEngine:
         slots_p = slots + [slots[0]] * pad
         steps = jnp.asarray([steps_of[r] for r in live] + [0] * pad,
                             jnp.int32)
-        toks0 = jnp.asarray([self._last_token(r) for r in live] + [0] * pad,
-                            jnp.int32)
+        starts = [self._last_token(r) for r in live]
+        toks0 = jnp.asarray(starts + [0] * pad, jnp.int32)
         eos = jnp.asarray([self.reqs[r].eos if self.reqs[r].eos is not None
                            else -1 for r in live] + [-1] * pad, jnp.int32)
         pos0 = jnp.asarray(self.kv.seq_len[slots_p], jnp.int32)
@@ -316,6 +467,9 @@ class ServingEngine:
             ctx = self.reqs[r]
             toks = [int(t) for t in em[i, :steps_of[r]] if t >= 0]
             ctx.generated.extend(toks)
+            # tokens written to KV this call: the start input + all but the
+            # last emission (whose KV lands on the next call)
+            ctx.history.extend(([starts[i]] + toks)[:len(toks)])
             out[r].extend(toks)
             self.kv.seq_len[slots[i]] += len(toks)
             self.counters["decode_tokens"] += len(toks)

@@ -1,10 +1,18 @@
 """Serving frontend: the request-facing layer around (scheduler, engine).
 
-Owns the Algorithm-1 control loop for a single replica: queueing arrivals,
-invoking the planner, executing planned batches on the engine, streaming
-tokens to per-request callbacks, and SLO bookkeeping.  launch/serve.py and
-examples/serve_e2e.py are thin wrappers over this class; a network server
-would wrap ``submit`` / ``step`` with its transport of choice.
+``ReplicaDriver`` owns the Algorithm-1 control loop for ONE replica:
+queueing arrivals, invoking the planner, executing planned batches on the
+engine, streaming tokens to per-request callbacks, SLO bookkeeping, the
+real best-effort tier (§4.1: surplus batch budget spent on declined
+requests), and page-pressure victim selection — when admission or a
+decode-step reservation exhausts the page pool, best-effort victims are
+preempted (``PagedKVManager.preempt`` frees their device pages, newest
+first, mirroring ``BestEffortQueue.preempt_for_pages``) and later resume
+with a recompute prefill.
+
+``ServingFrontend`` is the single-replica wrapper (launch/serve.py,
+examples/serve_e2e.py); ``serving/cluster.ClusterFrontend`` drives N
+ReplicaDrivers with SLO-routed dispatch (§4.2).
 
 Time is virtual (the planner's §3.1.1 perf model) so the control plane is
 deterministic and testable; the engine executes every token for real.
@@ -16,8 +24,10 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.core.admission import BestEffortQueue
+from repro.core.batch import Batch
 from repro.core.request import Request, RequestState
-from repro.core.scheduler import SchedulerConfig, SLOsServeScheduler
+from repro.core.scheduler import SLOsServeScheduler
 from repro.core.slo import StageKind
 from repro.serving.engine import ServingEngine
 
@@ -25,115 +35,405 @@ from repro.serving.engine import ServingEngine
 @dataclasses.dataclass
 class FrontendStats:
     submitted: int = 0
-    served: int = 0
+    served: int = 0          # terminal outcomes (finished + dropped)
     attained: int = 0
     dropped: int = 0
     tokens_out: int = 0
+    best_effort: int = 0     # requests demoted to the best-effort tier
+    preempted: int = 0       # real PagedKVManager.preempt invocations
 
 
-class ServingFrontend:
+@dataclasses.dataclass
+class DriveResult:
+    n_exec: int = 0          # engine batches executed
+    elapsed: float = 0.0     # virtual time consumed
+    declined: list = dataclasses.field(default_factory=list)
+
+
+class ReplicaDriver:
+    """One replica's serving loop, reusable by the single-replica
+    ``ServingFrontend`` and the multi-replica ``ClusterFrontend``."""
+
     def __init__(self, engine: ServingEngine, scheduler: SLOsServeScheduler,
-                 max_decline_retries: int = 3, seed: int = 0):
+                 idx: int = 0, seed: int = 0):
         self.engine = engine
         self.sched = scheduler
-        self.max_retries = max_decline_retries
+        self.idx = idx
         self.rng = np.random.default_rng(seed)
-        self.clock = 0.0
         self.new_q: list[Request] = []
         self.running: list[Request] = []
+        # §4.1 best-effort tier: FCFS service, LIFO preemption — the same
+        # ordering contract as the simulator's BestEffortQueue
+        self.be = BestEffortQueue(engine.ecfg.page_size)
+        self.saved_ctx: dict[int, object] = {}   # rid -> ctx evicted by drop
         self.streams: dict[int, Callable] = {}
         self.prompts: dict[int, list] = {}
+        self.encs: dict[int, object] = {}
         self.stats = FrontendStats()
+        self.preempted_rids: set[int] = set()
 
-    # ------------------------------------------------------------------ #
-    def submit(self, req: Request, prompt: Optional[list] = None,
-               on_token: Optional[Callable] = None,
-               enc_states=None) -> None:
-        """Queue a request; ``on_token(rid, [tokens])`` streams output."""
+    # ------------------------------ intake ----------------------------- #
+    def enqueue(self, req: Request, prompt: Optional[list] = None,
+                on_token: Optional[Callable] = None, enc_states=None,
+                best_effort: bool = False) -> None:
         if prompt is None:
             prompt = self.rng.integers(
                 1, self.engine.cfg.vocab, req.stages[0].length).tolist()
         self.prompts[req.rid] = prompt
         if on_token:
             self.streams[req.rid] = on_token
-        req._enc = enc_states
-        self.new_q.append(req)
-        self.stats.submitted += 1
+        if enc_states is not None:
+            self.encs[req.rid] = enc_states
+        if best_effort:
+            self.be.add(req)
+            self.stats.best_effort += 1
+        else:
+            self.new_q.append(req)
+
+    def forget(self, rid: int) -> None:
+        self.streams.pop(rid, None)
+        self.prompts.pop(rid, None)
+        self.encs.pop(rid, None)
+        self.saved_ctx.pop(rid, None)
+
+    def drop_request(self, r: Request) -> None:
+        self.stats.dropped += 1
+        self.stats.served += 1
+        self.forget(r.rid)
 
     @property
     def idle(self) -> bool:
-        return not (self.new_q or self.running)
+        return not (self.new_q or self.running or len(self.be))
 
-    # ------------------------------------------------------------------ #
-    def step(self, max_batches: int = 8) -> int:
-        """One scheduler invocation + up to ``max_batches`` engine batches.
-        Returns the number of batches executed."""
-        now = self.clock
+    def next_arrival(self) -> Optional[float]:
+        return min((r.arrival for r in self.new_q), default=None)
+
+    # ----------------------------- routing ----------------------------- #
+    def verdict(self, now: float, req: Request) -> bool:
+        """SLO-attainability probe (§4.2): would this replica's DP
+        scheduler admit ``req`` against its live state right now?"""
+        res = self.sched.plan(now, self.running, [req], self._mem_free(),
+                              admission_only=True)
+        return any(r.rid == req.rid for r in res.admitted)
+
+    def _mem_free(self) -> int:
+        # pages reclaimable by preempting the best-effort tier count as
+        # free for admission (the simulator's _replan does the same)
+        return self.engine.kv.free_pages + self._be_resident_pages()
+
+    def _be_resident_pages(self) -> int:
+        kv = self.engine.kv
+        return sum(len(kv.tables.get(e.req.rid, []))
+                   for e in self.be.entries if e.req.kv_resident)
+
+    # --------------------------- main loop ----------------------------- #
+    def drive(self, now: float, max_batches: int = 8) -> DriveResult:
+        """One scheduler invocation + up to ``max_batches`` engine batches;
+        declined arrivals are returned for the caller's fallback policy
+        (retry, route to another replica, or best-effort demotion)."""
+        res = DriveResult()
         arrivals = [r for r in self.new_q if r.arrival <= now]
         self.new_q = [r for r in self.new_q if r.arrival > now]
-        mem_free = (self.engine.kv.total_pages
-                    - self.engine.kv.used_pages)
-        res = self.sched.plan(now, self.running, arrivals, mem_free)
-        for r in res.admitted:
-            r.state = RequestState.RUNNING
-            self.running.append(r)
-            self.engine.add_request(r.rid, self.prompts[r.rid],
-                                    r.total_tokens() + 8,
-                                    enc_states=getattr(r, "_enc", None))
-        for r in res.deferred:
-            self.new_q.append(r)
-        for r in res.declined:
-            r.routing_hops += 1
-            if r.routing_hops <= self.max_retries:
-                self.new_q.append(r)
-            else:
-                self.stats.dropped += 1
-                self.stats.served += 1
-        if not res.batches:
-            nxt = min((r.arrival for r in self.new_q),
-                      default=now + 0.1)
-            self.clock = max(now + 0.05, nxt)
-            return 0
+        plan = self.sched.plan(now, self.running, arrivals, self._mem_free())
+        for r in plan.admitted:
+            if self._admit(r):
+                r.state = RequestState.RUNNING
+                self.running.append(r)
+            elif r.rid in self.prompts:
+                self.new_q.append(r)     # engine pressure: retry next plan
+        self.new_q.extend(plan.deferred)
+        res.declined = plan.declined
 
-        n_exec = 0
+        t = now
         by_rid = {r.rid: r for r in self.running}
-        for b in res.batches[:max_batches]:
-            out = self.engine.execute(b)
-            self.clock += max(b.est_duration, 1e-3)
-            n_exec += 1
-            for e in b.entries:               # prefill progress = chunks
-                r = by_rid.get(e.rid)
+        for b in plan.batches[:max_batches]:
+            out = self.engine.execute(b, on_pressure=self._preempt_for)
+            t += max(b.est_duration, 1e-3)
+            res.n_exec += 1
+            prog = self.engine.last_prefill_progress
+            for e in b.entries:          # prefill progress = fresh tokens
+                r = by_rid.get(e.rid)    # actually consumed (replay after
                 if r is not None and e.kind == StageKind.PREFILL \
-                        and r.in_prefill:
-                    r.advance(min(e.n_tokens, r.remaining_in_stage),
-                              self.clock)
+                        and r.in_prefill:      # preemption doesn't count)
+                    r.advance(min(prog.get(e.rid, 0),
+                                  r.remaining_in_stage), t)
             for rid, toks in out.items():
                 self.stats.tokens_out += len(toks)
                 if toks and rid in self.streams:
                     self.streams[rid](rid, toks)
                 r = by_rid.get(rid)
                 if r is not None:
-                    r.advance(len(toks), self.clock)
-            for r in list(self.running):
-                if r.finished:
-                    self._finish(r)
-                    by_rid.pop(r.rid, None)
-                elif r.in_prefill and r.rid in self.engine.reqs \
-                        and not self.engine.reqs[r.rid].pending:
-                    need = r.remaining_in_stage   # tool loop: new context
-                    if need > 0:
-                        self.engine.reqs[r.rid].pending.extend(
-                            self.rng.integers(1, self.engine.cfg.vocab,
-                                              need).tolist())
-        return n_exec
+                    r.advance(len(toks), t)
+            # surplus batch budget flows to the best-effort tier (§4.1)
+            if b.prefill_budget > 0 and len(self.be):
+                self._serve_best_effort(b.prefill_budget, t)
+            self._sweep(by_rid, t)
+        if not plan.batches and len(self.be):
+            # idle drain: no SLO-guaranteed work planned, so grant the
+            # best-effort tier one prefill-only batch worth of budget
+            dt = self.sched.cfg.prefill_only_latency
+            budget = max(int(self.sched.perf.time2bs(dt)), 16)
+            if self._serve_best_effort(budget, t + dt):
+                t += dt
+                res.n_exec += 1
+        res.elapsed = t - now
+        return res
+
+    def _sweep(self, by_rid: dict, t: float) -> None:
+        eng = self.engine
+        for r in list(self.running):
+            if r.finished:
+                self._finish(r)
+                by_rid.pop(r.rid, None)
+            elif r.in_prefill and r.rid in eng.reqs \
+                    and not eng.reqs[r.rid].pending:
+                need = r.remaining_in_stage   # tool loop: new context
+                if need > 0:
+                    eng.reqs[r.rid].pending.extend(
+                        self.rng.integers(1, eng.cfg.vocab, need).tolist())
 
     def _finish(self, r: Request) -> None:
         self.engine.finish(r.rid)
-        self.running.remove(r)
+        if r in self.running:
+            self.running.remove(r)
         self.stats.served += 1
         self.stats.attained += r.slo_attained(self.sched.zero_load_time)
-        self.streams.pop(r.rid, None)
-        self.prompts.pop(r.rid, None)
+        self.forget(r.rid)
+
+    # -------------------- admission & victim selection ------------------ #
+    def _admit(self, r: Request) -> bool:
+        """Engine admission with page-pressure preemption: a declined page
+        reservation victimizes best-effort requests to free real device
+        pages, then retries."""
+        eng = self.engine
+        prompt = self.prompts[r.rid]
+        if not self._servable(r, prompt):
+            self.drop_request(r)         # can never fit this engine
+            return False
+        expected = r.total_tokens() + 8
+        enc = self.encs.get(r.rid)
+        if eng.add_request(r.rid, prompt, expected, enc_states=enc):
+            return True
+        need = eng.kv.pages_needed(expected)
+        if need > eng.kv.free_pages:
+            self._preempt_for(need - eng.kv.free_pages)
+            if eng.add_request(r.rid, prompt, expected, enc_states=enc):
+                return True
+        if not eng.kv.free_seqs and self._evict_slot():
+            return eng.add_request(r.rid, prompt, expected, enc_states=enc)
+        return False
+
+    def _servable(self, r: Request, prompt: list) -> bool:
+        """A request whose FINAL context (all prefill + decode stages)
+        exceeds the per-sequence cap can never finish on this engine:
+        decode would silently cap at max_len and the request would sit in
+        the system forever (or a tool-loop prefill would raise)."""
+        return (len(prompt) <= self.engine.ecfg.max_len
+                and r.total_tokens() <= self.engine.ecfg.max_len)
+
+    def _preempt_for(self, pages_needed: int) -> int:
+        """Free >= ``pages_needed`` device pages by preempting best-effort
+        victims, newest first (the LIFO order of
+        ``BestEffortQueue.preempt_for_pages``); returns pages freed."""
+        freed = 0
+        for e in reversed(self.be.entries):
+            if freed >= pages_needed:
+                break
+            r = e.req
+            if not r.kv_resident or r.rid not in self.engine.reqs:
+                continue
+            freed += self.engine.preempt(r.rid)
+            r.kv_resident = False
+            r.state = RequestState.PREEMPTED
+            # keep the queue's own §4.1 bookkeeping truthful
+            e.recompute_remaining = len(self.engine.reqs[r.rid].pending)
+            e.prefilled = False
+            self.stats.preempted += 1
+            self.preempted_rids.add(r.rid)
+        return freed
+
+    def _evict_slot(self) -> bool:
+        """Sequence-slot pressure: fully evict one best-effort victim
+        (newest first), stashing its context for a later ``restore``."""
+        for e in reversed(self.be.entries):
+            r = e.req
+            if r.rid not in self.engine.reqs:
+                continue
+            if r.kv_resident:
+                self.engine.preempt(r.rid)
+                r.kv_resident = False
+                r.state = RequestState.PREEMPTED
+                e.recompute_remaining = len(self.engine.reqs[r.rid].pending)
+                e.prefilled = False
+                self.stats.preempted += 1
+                self.preempted_rids.add(r.rid)
+            self.saved_ctx[r.rid] = self.engine.drop(r.rid)
+            return True
+        return False
+
+    # ------------------------- best-effort tier ------------------------- #
+    @staticmethod
+    def _rest_tokens(r: Request) -> int:
+        rest = sum(s.length for s in r.stages[r.stage_idx:])
+        return max(rest - r.tokens_done, 0)
+
+    def _emit(self, r: Request, toks: list, t: float) -> None:
+        self.stats.tokens_out += len(toks)
+        if toks and r.rid in self.streams:
+            self.streams[r.rid](r.rid, toks)
+        r.advance(len(toks), t)
+
+    def _serve_best_effort(self, budget: int, t: float) -> bool:
+        """Spend surplus batch budget on the best-effort tier with REAL
+        execution: FCFS over entries (BestEffortQueue order); preempted
+        entries first re-reserve pages and replay their recompute prefill,
+        then decode.  Returns whether any engine work ran."""
+        eng = self.engine
+        worked = False
+        for e in list(self.be.entries):
+            if budget <= 0:
+                break
+            r = e.req
+            rid = r.rid
+            if not self._servable(r, self.prompts.get(rid, [])):
+                self.be.entries.remove(e)     # final context can't ever fit
+                self.drop_request(r)
+                continue
+            ctx = eng.reqs.get(rid)
+            if ctx is None:
+                saved = self.saved_ctx.pop(rid, None)
+                if saved is not None:
+                    if not eng.restore(rid, saved, len(saved.pending)
+                                       + self._rest_tokens(r) + 8):
+                        self.saved_ctx[rid] = saved
+                        self._maybe_unservable(e)
+                        continue
+                elif not eng.add_request(rid, self.prompts[rid],
+                                         r.total_tokens() + 8,
+                                         enc_states=self.encs.get(rid)):
+                    self._maybe_unservable(e)
+                    continue
+                ctx = eng.reqs[rid]
+                r.kv_resident = True
+                r.state = RequestState.BEST_EFFORT
+            elif not r.kv_resident:
+                # preempted: re-reserve pages, then replay the recompute
+                # prefill below (re-queued for re-prefill).  Hysteresis
+                # against preempt/readmit thrash: beyond the victim's own
+                # need, require a page of decode-growth headroom per
+                # running request, or the next guaranteed batch would just
+                # preempt it again after a wasted full-history recompute.
+                need = eng.kv.pages_needed(len(ctx.pending)
+                                           + self._rest_tokens(r) + 8)
+                if eng.kv.free_pages < need + len(self.running):
+                    continue
+                if not eng.readmit(rid, len(ctx.pending)
+                                   + self._rest_tokens(r) + 8):
+                    continue
+                r.kv_resident = True
+                r.state = RequestState.BEST_EFFORT
+            while budget > 0 and ctx.pending:
+                cap = eng.kv.token_capacity(rid) - eng.kv.length(rid)
+                take = min(budget, len(ctx.pending), max(cap, 0))
+                if take <= 0:
+                    break
+                b = Batch()
+                b.add(rid, StageKind.PREFILL, take)
+                out = eng.execute(b)
+                budget -= take
+                worked = True
+                prog = eng.last_prefill_progress.get(rid, 0)
+                if r.in_prefill and prog:
+                    r.advance(min(prog, r.remaining_in_stage), t)
+                self._emit(r, out.get(rid, []), t)
+            e.recompute_remaining = len(ctx.pending)
+            e.prefilled = not ctx.pending
+            if ctx.pending:
+                continue
+            while budget > 0 and not r.finished and r.in_decode \
+                    and not ctx.done:
+                n = min(budget, r.remaining_in_stage)
+                b = Batch()
+                b.add(rid, StageKind.DECODE, n)
+                out = eng.execute(b).get(rid, [])
+                if not out:
+                    break                # page-capped: wait for free pages
+                budget -= len(out)
+                worked = True
+                e.generated += len(out)
+                self._emit(r, out, t)
+            if not r.finished and r.in_prefill and not ctx.pending:
+                need = r.remaining_in_stage   # tool loop context
+                if need > 0:
+                    ctx.pending.extend(self.rng.integers(
+                        1, eng.cfg.vocab, need).tolist())
+            if r.finished:
+                r.kv_resident = False
+                self.be.entries.remove(e)
+                self._finish(r)
+        return worked
+
+    def _maybe_unservable(self, e) -> None:
+        """A best-effort request that cannot be admitted even into a fully
+        idle pool will never fit: drop it instead of spinning forever.
+        (``free_pages == total_pages`` also requires the SHARED budget to
+        be unconstrained — a request blocked only by another replica's
+        budget usage is temporary, not unservable.)"""
+        kv = self.engine.kv
+        if kv.used_pages == 0 and not self.running \
+                and kv.free_pages == kv.total_pages:
+            self.be.entries.remove(e)
+            self.drop_request(e.req)
+
+
+class ServingFrontend:
+    """Single-replica frontend: a thin wrapper over one ReplicaDriver.
+    launch/serve.py and examples/serve_e2e.py drive this class; a network
+    server would wrap ``submit`` / ``step`` with its transport."""
+
+    def __init__(self, engine: ServingEngine, scheduler: SLOsServeScheduler,
+                 max_decline_retries: int = 3, seed: int = 0):
+        self.engine = engine
+        self.sched = scheduler
+        self.max_retries = max_decline_retries
+        self.driver = ReplicaDriver(engine, scheduler, seed=seed)
+        self.clock = 0.0
+
+    @property
+    def stats(self) -> FrontendStats:
+        return self.driver.stats
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request, prompt: Optional[list] = None,
+               on_token: Optional[Callable] = None,
+               enc_states=None) -> None:
+        """Queue a request; ``on_token(rid, [tokens])`` streams output."""
+        self.driver.enqueue(req, prompt, on_token, enc_states)
+        self.driver.stats.submitted += 1
+
+    @property
+    def idle(self) -> bool:
+        return self.driver.idle
+
+    # ------------------------------------------------------------------ #
+    def step(self, max_batches: int = 8) -> int:
+        """One scheduler invocation + up to ``max_batches`` engine batches.
+        Returns the number of batches executed."""
+        now = self.clock
+        res = self.driver.drive(now, max_batches)
+        for r in res.declined:
+            r.routing_hops += 1
+            if r.routing_hops <= self.max_retries:
+                self.driver.new_q.append(r)
+            else:
+                self.driver.drop_request(r)
+        if res.n_exec == 0:
+            nxt = min((r.arrival for r in self.driver.new_q),
+                      default=now + 0.1)
+            self.clock = max(now + 0.05, nxt)
+        else:
+            self.clock = now + res.elapsed
+        return res.n_exec
 
     # ------------------------------------------------------------------ #
     def run_until_idle(self, max_steps: int = 10_000) -> FrontendStats:

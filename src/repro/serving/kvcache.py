@@ -28,10 +28,42 @@ from repro.models.config import ModelConfig
 from repro.models.transformer import init_paged_cache
 
 
+class SharedPageBudget:
+    """Cluster-wide KV page budget shared by several PagedKVManagers.
+
+    Each replica owns its physical page pool, but every allocation also
+    draws on this logical budget, so a multi-replica cluster can bound its
+    aggregate KV footprint below the sum of the per-replica pools (§4.2
+    multi-replica serving against one memory budget).  Conservation
+    invariant: ``used`` always equals the sum of ``used_pages`` over the
+    attached managers.
+    """
+
+    def __init__(self, total_pages: int):
+        self.total_pages = total_pages
+        self.used = 0
+
+    @property
+    def available(self) -> int:
+        return self.total_pages - self.used
+
+    def reserve(self, n_pages: int) -> bool:
+        if n_pages > self.available:
+            return False
+        self.used += n_pages
+        return True
+
+    def release(self, n_pages: int) -> None:
+        self.used -= n_pages
+        assert self.used >= 0, "shared budget released more than reserved"
+
+
 class PageAllocator:
-    def __init__(self, total_pages: int, page_size: int = 16):
+    def __init__(self, total_pages: int, page_size: int = 16,
+                 budget: Optional[SharedPageBudget] = None):
         self.total_pages = total_pages
         self.page_size = page_size
+        self.budget = budget
         self.free = list(range(total_pages - 1, -1, -1))
         self.tables: dict[int, list[int]] = {}
 
@@ -39,11 +71,13 @@ class PageAllocator:
         return max(1, math.ceil(n_tokens / self.page_size))
 
     def can_allocate(self, n_tokens: int) -> bool:
-        return self.pages_needed(n_tokens) <= len(self.free)
+        return self.pages_needed(n_tokens) <= self.free_pages
 
     def allocate(self, rid: int, n_tokens: int) -> Optional[list[int]]:
         need = self.pages_needed(n_tokens)
         if need > len(self.free):
+            return None
+        if self.budget is not None and not self.budget.reserve(need):
             return None
         pages = [self.free.pop() for _ in range(need)]
         self.tables.setdefault(rid, []).extend(pages)
@@ -57,6 +91,8 @@ class PageAllocator:
         extra = need - have
         if extra > len(self.free):
             return False
+        if self.budget is not None and not self.budget.reserve(extra):
+            return False
         self.tables.setdefault(rid, []).extend(
             self.free.pop() for _ in range(extra))
         return True
@@ -64,11 +100,21 @@ class PageAllocator:
     def release(self, rid: int) -> int:
         pages = self.tables.pop(rid, [])
         self.free.extend(reversed(pages))
+        if self.budget is not None:
+            self.budget.release(len(pages))
         return len(pages)
 
     @property
     def used_pages(self) -> int:
         return self.total_pages - len(self.free)
+
+    @property
+    def free_pages(self) -> int:
+        """Pages allocatable right now: the local free list, further capped
+        by what remains of the shared cluster budget."""
+        if self.budget is None:
+            return len(self.free)
+        return min(len(self.free), self.budget.available)
 
 
 class PagedKVManager(PageAllocator):
@@ -86,8 +132,9 @@ class PagedKVManager(PageAllocator):
 
     def __init__(self, cfg: ModelConfig, *, total_pages: int,
                  page_size: int = 16, max_seqs: int = 8,
-                 max_len: int = 512, dtype=jnp.float32):
-        super().__init__(total_pages, page_size)
+                 max_len: int = 512, dtype=jnp.float32,
+                 budget: Optional[SharedPageBudget] = None):
+        super().__init__(total_pages, page_size, budget=budget)
         self.cfg = cfg
         self.max_seqs = max_seqs
         self.max_len = max_len
@@ -184,7 +231,7 @@ class PagedKVManager(PageAllocator):
         """Max context this request could reach right now: its mapped
         pages plus the whole free list, capped by the block-table width."""
         have = len(self.tables.get(rid, []))
-        return min(self.max_len, (have + len(self.free)) * self.page_size)
+        return min(self.max_len, (have + self.free_pages) * self.page_size)
 
     # ------------------------ device-facing views ----------------------- #
     def table_rows(self, slots) -> jnp.ndarray:

@@ -168,7 +168,11 @@ class SpecDecoder:
         want = len(seq) + len(emitted) - 1
         if dlen > want:
             self.kv.truncate(rid, dlen - want)
-        eng.reqs[rid].generated.extend(emitted)
+        ctx = eng.reqs[rid]
+        # target KV retained this cycle: [seq[-1]] + accepted drafts —
+        # mirrored into history so preemption can recompute it exactly
+        ctx.history.extend(([seq[-1]] + emitted)[:len(emitted)])
+        ctx.generated.extend(emitted)
         return emitted
 
     def release(self, rid: int) -> None:

@@ -1,7 +1,6 @@
 """Checkpointing: flatten pytrees to .npz + JSON tree spec (no orbax)."""
 from __future__ import annotations
 
-import json
 import os
 import re
 from typing import Any

@@ -1,0 +1,296 @@
+"""Real multi-replica cluster runtime: SLO-routed engine pool with
+page-pressure preemption (serving/cluster.py).
+
+Covers (a) routing order / hop limit / backup policy, (b) preemption
+invariants — every page returns to the free list and the preempted request
+replays to an identical greedy token stream, (c) shared-page-budget
+conservation across replicas, and the end-to-end acceptance scenario: a
+bursty workload that overflows one replica's page pool completes on a
+2-replica ClusterFrontend with real routing and real
+``PagedKVManager.preempt`` invocations (engine counters)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.batch import Batch
+from repro.core.perf_model import cpu_scale_perf_model
+from repro.core.request import simple_request
+from repro.core.router import RoutingPolicy, make_real_cluster
+from repro.core.scheduler import SchedulerConfig
+from repro.core.slo import StageKind
+from repro.models import init_params, logits_fn, model_forward
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.kvcache import PagedKVManager, SharedPageBudget
+
+VIRT = cpu_scale_perf_model()
+CFG = get_reduced("smollm-135m")
+PARAMS = init_params(jax.random.PRNGKey(0), CFG)
+
+
+def naive_generate(prompt, n_out):
+    toks = list(prompt)
+    for _ in range(n_out):
+        h, _, _ = model_forward(PARAMS, CFG, jnp.asarray([toks], jnp.int32))
+        lg = logits_fn(PARAMS, CFG, h)
+        toks.append(int(jnp.argmax(lg[0, -1])))
+    return toks[len(prompt):]
+
+
+def make_cluster(n=2, **kw):
+    defaults = dict(
+        policy=RoutingPolicy(max_hops=1),
+        total_pages=32, replica_pages=16, page_size=4,
+        max_slots=8, max_len=64,
+        sched_cfg=SchedulerConfig(page_size=4,
+                                  prefill_emits_first_token=True))
+    defaults.update(kw)
+    return make_real_cluster(n, CFG, PARAMS, VIRT, **defaults)
+
+
+# ------------------------- (a) routing policy --------------------------- #
+def test_routing_probes_replicas_in_order_then_backs_up():
+    cl = make_cluster(n=3, policy=RoutingPolicy(max_hops=2))
+    probed = []
+    for d in cl.drivers:
+        d.verdict = (lambda i: lambda now, req: (probed.append(i), False)[1]
+                     )(d.idx)
+    req = simple_request(1, 0.0, prompt=8, output=4,
+                         ttft_slowdown=4.0, tpot=0.1)
+    cl.submit(req)
+    cl.step()
+    # sequential §4.2 routing: first choice, then the next replicas, one
+    # hop per decline, until the hop limit
+    assert probed == [0, 1, 2]
+    # backup policy fired last: the best-effort tier took the request
+    # (and may already have served it from surplus/idle-drain budget)
+    assert cl.stats.best_effort == 1
+    stats = cl.run_until_idle()
+    assert stats.served == 1 and stats.dropped == 0
+    assert req.finished
+
+
+def test_routing_assigns_first_accepting_replica():
+    cl = make_cluster(n=3, policy=RoutingPolicy(max_hops=2))
+    cl.drivers[0].verdict = lambda now, req: False
+    req = simple_request(7, 0.0, prompt=8, output=4,
+                         ttft_slowdown=6.0, tpot=0.1)
+    cl.submit(req)
+    stats = cl.run_until_idle()
+    assert stats.served == 1 and stats.dropped == 0
+    assert req.routing_hops == 1          # one decline consumed one hop
+    assert stats.routed == 1
+    assert cl.drivers[1].stats.served == 1   # replica 1 accepted + served
+
+
+def test_hop_limit_respected_and_backup_decline_drops():
+    cl = make_cluster(n=3, policy=RoutingPolicy(max_hops=1,
+                                                backup="decline"))
+    probed = []
+    for d in cl.drivers:
+        d.verdict = (lambda i: lambda now, req: (probed.append(i), False)[1]
+                     )(d.idx)
+    cl.submit(simple_request(1, 0.0, prompt=8, output=4,
+                             ttft_slowdown=4.0, tpot=0.1))
+    cl.step()
+    assert probed == [0, 1]               # max_hops=1: only two candidates
+    assert cl.stats.dropped == 1
+    assert cl.stats.best_effort == 0
+    assert cl.idle
+
+
+def test_unservable_total_context_dropped_not_livelocked():
+    """A request whose FINAL context exceeds max_len can never finish on a
+    real engine (decode caps at the context window): it must be dropped at
+    admission instead of livelocking run_until_idle."""
+    cl = make_cluster(n=2)                 # max_len=64
+    cl.submit(simple_request(1, 0.0, prompt=40, output=40,
+                             ttft_slowdown=8.0, tpot=0.15))
+    stats = cl.run_until_idle(max_steps=300)
+    assert cl.idle
+    assert stats.dropped == 1
+    assert stats.served == stats.submitted == 1
+
+
+# --------------------- (b) preemption invariants ------------------------ #
+def test_preempt_returns_all_pages_and_replays_identical_stream():
+    def fresh():
+        return ServingEngine(CFG, PARAMS,
+                             EngineConfig(max_slots=4, max_len=128,
+                                          total_pages=32, page_size=4))
+
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, CFG.vocab, 20).tolist()
+    want = naive_generate(prompt, 9)
+
+    eng = fresh()
+    assert eng.add_request(1, prompt, expected_total=32)
+    b = Batch()
+    b.add(1, StageKind.PREFILL, 20)
+    got = eng.execute(b).get(1, [])
+    b = Batch()
+    b.add(1, StageKind.DECODE, 4)
+    got += eng.execute(b).get(1, [])
+
+    freed = eng.preempt(1)
+    assert freed > 0
+    # every page is back on the free list; the sequence slot is kept
+    assert eng.kv.used_pages == 0
+    assert sorted(eng.kv.free) == list(range(32))
+    assert 1 in eng.kv.seq_of
+    assert eng.counters["preemptions"] == 1
+
+    # re-admission + recompute prefill (uneven chunks) emits nothing and
+    # reports zero request-level progress (it is replay, not fresh work)
+    ctx = eng.reqs[1]
+    assert eng.readmit(1, len(ctx.pending) + 8)
+    for n in (11, 100):
+        b = Batch()
+        b.add(1, StageKind.PREFILL, n)
+        assert eng.execute(b).get(1, []) == []
+        assert eng.last_prefill_progress[1] == 0
+    b = Batch()
+    b.add(1, StageKind.DECODE, 4)
+    got += eng.execute(b).get(1, [])
+    assert got == want, (got, want)
+
+    eng.finish(1)
+    assert eng.kv.used_pages == 0 and not eng.kv.seq_of
+
+
+def test_decode_pressure_callback_preempts_victims():
+    """The engine's on_pressure hook is the §4.1 trigger for decode-step
+    reservations: ReplicaDriver admission reserves the paper's full memory
+    demand up front, so this path is the safety net for under-reserving
+    engine users (``expected_total`` is a hint, per the seed API) and for
+    speculation windows beyond the admission headroom — it must preempt
+    victims and let decode run past what capping alone would emit."""
+    eng = ServingEngine(CFG, PARAMS,
+                        EngineConfig(max_slots=4, max_len=64,
+                                     total_pages=8, page_size=4))
+    # victim (a resident best-effort request) holds half the pool
+    assert eng.add_request(9, list(range(1, 13)), expected_total=16)
+    b = Batch()
+    b.add(9, StageKind.PREFILL, 12)
+    eng.execute(b)
+    # under-reserved guaranteed request: admission hint < decode demand
+    assert eng.add_request(1, list(range(1, 13)), expected_total=13)
+    b = Batch()
+    b.add(1, StageKind.PREFILL, 12)
+    eng.execute(b)
+    assert eng.kv.free_pages == 0                 # pool exhausted
+
+    shortfalls = []
+
+    def on_pressure(pages_short):
+        shortfalls.append(pages_short)
+        eng.preempt(9)                            # victim selection
+
+    b = Batch()
+    b.add(1, StageKind.DECODE, 8)                 # needs 1 page beyond cap
+    out = eng.execute(b, on_pressure=on_pressure).get(1, [])
+    assert shortfalls == [1]
+    assert len(out) == 8                          # NOT capped at 4
+    assert eng.counters["preemptions"] == 1
+
+
+# ------------------- (c) shared-budget conservation --------------------- #
+def test_shared_budget_conservation_across_managers():
+    budget = SharedPageBudget(24)
+    mgrs = [PagedKVManager(CFG, total_pages=16, page_size=4, max_seqs=4,
+                           max_len=64, budget=budget) for _ in range(2)]
+
+    def check():
+        assert sum(m.used_pages for m in mgrs) == budget.used
+        assert 0 <= budget.used <= budget.total_pages
+
+    m0, m1 = mgrs
+    assert m0.admit(1, 40)                # 10 pages
+    check()
+    assert m1.admit(2, 40)                # 10 pages -> 20/24 used
+    check()
+    # m1 has 6 pages locally free but only 4 remain in the shared budget
+    assert m1.free_pages == 4
+    assert not m1.admit(3, 20)            # 5 pages > 4 budget: refused
+    assert not m0.extend(1, 60)           # +5 pages > 4 budget: refused
+    check()
+    assert m1.extend(2, 56)               # +4 pages: exactly fits
+    check()
+    assert budget.available == 0
+    assert m0.preempt(1) == 10            # preemption refills the budget
+    check()
+    assert budget.used == 14
+    assert m0.extend(1, 40)               # re-admission draws again
+    check()
+    m0.release(1)
+    m1.release(2)
+    check()
+    assert budget.used == 0
+
+
+# -------------------------- acceptance e2e ------------------------------ #
+def test_burst_overflow_routes_and_preempts_on_two_replicas():
+    """Fig. 11-style burst on REAL engines: one replica's pool overflows,
+    requests route to the second replica, overflow demotes to best-effort,
+    and later guaranteed admissions preempt resident best-effort victims
+    (real PagedKVManager.preempt, asserted via engine counters) — yet
+    every request completes with the exact greedy token stream."""
+    cl = make_cluster(n=2, policy=RoutingPolicy(max_hops=1))
+    rng = np.random.default_rng(3)
+    got: dict[int, list] = {}
+    prompts: dict[int, list] = {}
+
+    def submit(rid, arrival):
+        req = simple_request(rid, arrival, prompt=24, output=8,
+                             ttft_slowdown=8.0, tpot=0.15)
+        prompts[rid] = rng.integers(1, CFG.vocab, 24).tolist()
+        cl.submit(req, prompt=prompts[rid],
+                  on_token=lambda r, toks: got.setdefault(r, []).extend(toks))
+
+    def check_budget():
+        used = sum(d.engine.kv.used_pages for d in cl.drivers)
+        assert used == cl.budget.used <= cl.budget.total_pages
+
+    # burst: 8 requests at t=0 against 2x16 pages (4 pages/req of demand
+    # per replica beyond capacity) -> declines route, overflow goes BE
+    for i in range(8):
+        submit(i, 0.0)
+    for _ in range(200):
+        cl.step()
+        check_budget()
+        if any(e.req.kv_resident for d in cl.drivers for e in d.be.entries):
+            break
+    assert cl.stats.best_effort >= 1
+    assert cl.stats.routed >= 1
+
+    # second wave of guaranteed arrivals while best-effort KV is resident:
+    # admission pressure must preempt real device pages
+    for i in (100, 101, 102, 103):
+        submit(i, cl.clock)
+    for _ in range(600):
+        if cl.idle:
+            break
+        cl.step()
+        check_budget()
+    assert cl.idle
+
+    stats = cl.stats
+    assert stats.served == stats.submitted == 12
+    assert stats.dropped == 0
+    preempts = sum(d.engine.counters["preemptions"] for d in cl.drivers)
+    assert preempts >= 1
+    assert stats.preempted == preempts
+
+    # pages and budget fully conserved after drain
+    assert cl.budget.used == 0
+    for d in cl.drivers:
+        assert d.engine.kv.used_pages == 0
+
+    # every request streamed its full decode stage...
+    for rid in prompts:
+        assert len(got[rid]) == 8, (rid, got.get(rid))
+    # ...and preempted requests replayed to the exact greedy stream
+    preempted = set().union(*(d.preempted_rids for d in cl.drivers))
+    assert preempted
+    for rid in preempted:
+        assert got[rid] == naive_generate(prompts[rid], 8), rid

@@ -2,14 +2,14 @@
 import jax
 
 from repro.configs import get_reduced
-from repro.core.perf_model import PerfModel
+from repro.core.perf_model import cpu_scale_perf_model
 from repro.core.request import simple_request
 from repro.core.scheduler import SchedulerConfig, SLOsServeScheduler
 from repro.models import init_params
 from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.frontend import ServingFrontend
 
-VIRT = PerfModel(terms=((5e-3, 0.0, 1e-3), (5e-4, 0.0, 2e-2)))
+VIRT = cpu_scale_perf_model()
 
 
 def make_frontend():

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import ops
 from repro.kernels.ref import ref_attention_bh, ref_paged_decode, ref_ssd
 
 KEY = jax.random.PRNGKey(0)

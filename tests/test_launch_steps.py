@@ -9,7 +9,7 @@ import pytest
 from repro.configs import get_reduced
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_host_mesh
-from repro.launch.steps import SHAPES, build, shape_supported
+from repro.launch.steps import build, shape_supported
 
 SMALL_SHAPES = {
     "train_4k": dict(seq_len=64, global_batch=4, kind="train"),

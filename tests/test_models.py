@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_reduced
-from repro.models import (encdec_forward, encoder_forward, init_cache,
+from repro.models import (encoder_forward, init_cache,
                           init_encdec_params, init_params, logits_fn,
                           model_forward)
 from repro.models.moe import moe_forward
@@ -115,7 +115,6 @@ def test_moe_capacity_drops_tokens_gracefully():
 
 def test_ssd_chunk_size_invariance():
     """Chunked SSD must be invariant to the chunk size (vs chunk=S)."""
-    cfg = get_reduced("mamba2-2.7b")
     B, S, H, P, N = 2, 32, 4, 16, 8
     k1, k2, k3, k4 = jax.random.split(KEY, 4)
     xh = jax.random.normal(k1, (B, S, H, P))

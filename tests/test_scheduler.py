@@ -7,7 +7,7 @@ from repro.core.batch_formation import (DecodeDemand, form_batches,
                                         pb_star_fluid)
 from repro.core.dp_scheduler import Candidate, dp_admission
 from repro.core.perf_model import PerfModel, opt_perf_model
-from repro.core.request import Request, simple_request
+from repro.core.request import simple_request
 from repro.core.scheduler import SLOsServeScheduler, SchedulerConfig
 from repro.core.slo import StageKind
 

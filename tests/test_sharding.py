@@ -1,9 +1,6 @@
 """Sharding-rule unit tests (AbstractMesh: no devices needed)."""
-import jax
-import jax.numpy as jnp
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
-from repro.configs import get_config
 from repro.distributed.sharding import _fit, batch_spec, param_spec
 
 MESH = AbstractMesh((("data", 16), ("model", 16)))

@@ -2,11 +2,10 @@
 import numpy as np
 import pytest
 
-from repro.core import opt_perf_model, SimConfig
+from repro.core import opt_perf_model
 from repro.core.admission import BestEffortQueue
-from repro.core.request import Request, RequestState, simple_request
+from repro.core.request import RequestState, simple_request
 from repro.core.router import make_baseline_cluster, make_slos_serve_cluster
-from repro.core.slo import StageKind
 from repro.core.workload import (SCENARIOS, TABLE4, generate_workload,
                                  bursty_arrivals, poisson_arrivals)
 

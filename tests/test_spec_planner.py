@@ -1,6 +1,5 @@
 import math
 
-import pytest
 
 from repro.core.perf_model import PerfModel, opt_perf_model
 from repro.core.spec_planner import acc_len, plan_speculation, strengthen_slo

@@ -1,5 +1,4 @@
 """Training substrate: loss decreases, checkpoint round-trip, optimizer."""
-import os
 
 import jax
 import jax.numpy as jnp
