@@ -26,6 +26,12 @@ class RoutingPolicy:
     max_hops: int = 3
     routing_delay: float = 0.002
     backup: str = "best_effort"     # or "decline"
+    # Prefix-affinity hint (real cluster only): probe the replica whose
+    # paged pool holds the best cached-prefix match for the request's
+    # prompt FIRST, before the round-robin / SLO-verdict hop sequence —
+    # PolyServe-style locality-aware placement.  The event simulator has
+    # no token-level cache and ignores the flag.
+    prefix_affinity: bool = True
 
 
 def make_slos_serve_cluster(n_replicas: int, perf: PerfModel,

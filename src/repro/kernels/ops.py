@@ -58,16 +58,19 @@ def attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
     return o.astype(q.dtype)
 
 
-@partial(jax.jit, static_argnames=("scale", "interpret"))
+@partial(jax.jit, static_argnames=("scale", "window", "interpret"))
 def paged_attention(q, k_pages, v_pages, block_table, seq_lens, *,
-                    scale: float = None, interpret: bool = None):
+                    scale: float = None, window: int = None,
+                    interpret: bool = None):
     """Decode attention against paged KV.  q: (B,H,hd); k/v_pages:
-    (n_pages, page, KVH, hd); block_table: (B,max_pages); seq_lens: (B,)."""
+    (n_pages, page, KVH, hd); block_table: (B,max_pages); seq_lens: (B,);
+    window: sliding-window size in tokens (None = full causal)."""
     interpret = _interpret_default() if interpret is None else interpret
     return paged_decode_attention(q, k_pages, v_pages,
                                   block_table.astype(jnp.int32),
                                   seq_lens.astype(jnp.int32),
-                                  scale=scale, interpret=interpret)
+                                  scale=scale, window=window,
+                                  interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

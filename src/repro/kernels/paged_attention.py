@@ -7,10 +7,18 @@ pages are DMA'd from HBM (memory_space=ANY) into VMEM one page at a time
 with ``pl.load`` — the TPU analogue of the CUDA gather loop.  Flash-style
 online softmax runs as a fori_loop carry, GQA handled by grouping q heads
 over KV heads inside the tile.
+
+Sliding-window attention (``window``): the query sits at position
+``seq_len - 1`` and may only see keys at positions ``>= seq_len - window``.
+Pages entirely outside the window are skipped — the page loop starts at
+the first page intersecting the window (and ends after the last valid
+page), so a long-context decode touches O(window / page) pages — and the
+boundary page is masked per position.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +30,8 @@ NEG_INF = -1e30
 
 def _paged_kernel(table_ref, len_ref, q_ref, k_pages_ref, v_pages_ref,
                   o_ref, *, scale: float, max_pages: int, page: int,
-                  n_kvh: int, group: int, hd: int):
+                  n_kvh: int, group: int, hd: int,
+                  window: Optional[int]):
     b = pl.program_id(0)
     q = q_ref[0].astype(jnp.float32)                     # (H, hd)
     q = q.reshape(n_kvh, group, hd)
@@ -36,7 +45,10 @@ def _paged_kernel(table_ref, len_ref, q_ref, k_pages_ref, v_pages_ref,
         s = jnp.einsum("kgd,pkd->kgp", q, k) * scale       # (KVH,G,page)
         pos = i * page + jax.lax.broadcasted_iota(
             jnp.int32, (n_kvh, group, page), 2)
-        s = jnp.where(pos < seq_len, s, NEG_INF)
+        valid = pos < seq_len
+        if window is not None:
+            valid &= pos >= seq_len - window
+        s = jnp.where(valid, s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
         alpha = jnp.exp(m - m_new)
@@ -47,15 +59,24 @@ def _paged_kernel(table_ref, len_ref, q_ref, k_pages_ref, v_pages_ref,
     m0 = jnp.full((n_kvh, group, 1), NEG_INF, jnp.float32)
     l0 = jnp.zeros((n_kvh, group, 1), jnp.float32)
     a0 = jnp.zeros((n_kvh, group, hd), jnp.float32)
-    m, l, acc = jax.lax.fori_loop(0, max_pages, body, (m0, l0, a0))
+    if window is None:
+        lo, hi = 0, max_pages
+    else:
+        # skip pages strictly outside [seq_len - window, seq_len)
+        lo = jnp.maximum((seq_len - window) // page, 0)
+        hi = jnp.minimum((seq_len + page - 1) // page, max_pages)
+    m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, a0))
     out = acc / jnp.maximum(l, 1e-30)
     o_ref[0] = out.reshape(n_kvh * group, hd).astype(o_ref.dtype)
 
 
 def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens, *,
-                           scale: float = None, interpret: bool = True):
+                           scale: float = None,
+                           window: Optional[int] = None,
+                           interpret: bool = True):
     """q: (B, H, hd); k/v_pages: (n_pages, page, KVH, hd);
-    block_table: (B, max_pages) int32; seq_lens: (B,) int32."""
+    block_table: (B, max_pages) int32; seq_lens: (B,) int32;
+    window: sliding-window size in tokens (None = full causal)."""
     B, H, hd = q.shape
     n_pages, page, KVH, _ = k_pages.shape
     max_pages = block_table.shape[1]
@@ -65,7 +86,7 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens, *,
 
     kernel = functools.partial(
         _paged_kernel, scale=scale, max_pages=max_pages, page=page,
-        n_kvh=KVH, group=group, hd=hd)
+        n_kvh=KVH, group=group, hd=hd, window=window)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                     # block_table, seq_lens
         grid=(B,),

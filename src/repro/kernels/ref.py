@@ -27,11 +27,13 @@ def ref_attention_bh(q, k, v, *, causal=True, q_offset=0, kv_len=None,
 
 
 def ref_paged_decode(q, k_pages, v_pages, block_table, seq_lens, *,
-                     scale=None):
+                     scale=None, window=None):
     """Decode attention against a paged KV cache.
 
     q: (B, H, hd); k/v_pages: (n_pages, page, KVH, hd);
-    block_table: (B, max_pages) int32; seq_lens: (B,) int32.
+    block_table: (B, max_pages) int32; seq_lens: (B,) int32;
+    window: sliding-window size in tokens (the query at position
+    ``seq_len - 1`` sees keys at positions >= ``seq_len - window``).
     """
     B, H, hd = q.shape
     n_pages, page, KVH, _ = k_pages.shape
@@ -47,6 +49,8 @@ def ref_paged_decode(q, k_pages, v_pages, block_table, seq_lens, *,
         s = jnp.einsum("hd,shd->hs", q[b].astype(jnp.float32),
                        ks.astype(jnp.float32)) * scale
         valid = jnp.arange(max_pages * page) < seq_lens[b]
+        if window is not None:
+            valid &= jnp.arange(max_pages * page) >= seq_lens[b] - window
         s = jnp.where(valid[None, :], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
         out.append(jnp.einsum("hs,shd->hd", p, vs.astype(jnp.float32)))

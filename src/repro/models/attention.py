@@ -71,12 +71,12 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, kv_len, *,
     dispatch point.  q: (B, 1, H, hd) -> (B, 1, H, hd)."""
     impl = PAGED_DECODE_IMPL
     if impl == "auto":
-        impl = ("pallas" if jax.default_backend() == "tpu" and window is None
-                else "gather")
-    if impl == "pallas" and window is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "gather"
+    if impl == "pallas":
         from repro.kernels import ops
         out = ops.paged_attention(q[:, 0], k_pages, v_pages,
-                                  block_table, kv_len, scale=scale)
+                                  block_table, kv_len, scale=scale,
+                                  window=window)
         return out[:, None].astype(q.dtype)
     k = paged_gather(k_pages, block_table).astype(q.dtype)
     v = paged_gather(v_pages, block_table).astype(q.dtype)

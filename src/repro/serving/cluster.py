@@ -50,6 +50,8 @@ class ClusterStats:
     best_effort: int = 0     # requests demoted to the best-effort tier
     preempted: int = 0       # real PagedKVManager.preempt invocations
     tokens_out: int = 0
+    prefix_hit_tokens: int = 0   # prompt tokens served from shared pages
+    affinity_routed: int = 0     # first probes placed by prefix affinity
 
 
 @dataclasses.dataclass
@@ -75,6 +77,7 @@ class ClusterFrontend:
         self._routed: set[int] = set()
         self._submitted = 0
         self._dropped = 0
+        self._affinity_routed = 0
 
     # ------------------------------------------------------------------ #
     @classmethod
@@ -83,8 +86,8 @@ class ClusterFrontend:
               policy: RoutingPolicy = None, total_pages: int = 256,
               replica_pages: int = None, page_size: int = 16,
               max_slots: int = 8, max_len: int = 256, dtype=jnp.float32,
-              seed: int = 0, draft: Optional[tuple] = None
-              ) -> "ClusterFrontend":
+              seed: int = 0, draft: Optional[tuple] = None,
+              share_prefix: bool = True) -> "ClusterFrontend":
         """Carve ``total_pages`` (one shared budget) into per-replica paged
         KV pools and stand up N real engines over shared ``params``.
         ``replica_pages`` defaults to an even split; setting it higher lets
@@ -99,7 +102,8 @@ class ClusterFrontend:
                 model_cfg, params,
                 EngineConfig(max_slots=max_slots, max_len=max_len,
                              page_size=page_size, total_pages=replica_pages,
-                             dtype=dtype, seed=seed + i),
+                             dtype=dtype, seed=seed + i,
+                             share_prefix=share_prefix),
                 draft=draft, kv_budget=budget)
             cfg = sched_cfg or SchedulerConfig(
                 page_size=page_size, prefill_emits_first_token=True)
@@ -125,7 +129,8 @@ class ClusterFrontend:
     @property
     def stats(self) -> ClusterStats:
         s = ClusterStats(submitted=self._submitted, dropped=self._dropped,
-                         served=self._dropped, routed=len(self._routed))
+                         served=self._dropped, routed=len(self._routed),
+                         affinity_routed=self._affinity_routed)
         for d in self.drivers:
             s.served += d.stats.served
             s.attained += d.stats.attained
@@ -133,18 +138,39 @@ class ClusterFrontend:
             s.best_effort += d.stats.best_effort
             s.tokens_out += d.stats.tokens_out
             s.preempted += d.engine.counters["preemptions"]
+            s.prefix_hit_tokens += d.engine.counters["prefix_hit_tokens"]
         return s
 
     # ----------------------------- routing ----------------------------- #
+    def _first_choice(self, p: _Payload) -> int:
+        """Pick the request's first-choice replica: the replica with the
+        best cached-prefix match for its prompt (prefix-affinity hint —
+        shared pages there make its DP verdict cheaper to satisfy and the
+        prefill shorter), falling back to round-robin when no replica
+        holds any of the prefix (or the prompt is not known yet)."""
+        rr = self._rr % len(self.drivers)
+        self._rr += 1
+        if not self.policy.prefix_affinity or p.prompt is None \
+                or p.enc_states is not None:
+            return rr
+        hits = [d.engine.kv.probe_prefix(p.prompt) for d in self.drivers]
+        best = int(np.argmax(hits))
+        if hits[best] <= 0:
+            return rr
+        self._affinity_routed += 1
+        return best
+
     def _route(self, p: _Payload, now: float) -> None:
         """§4.2 sequential routing: try replicas in round-robin order from
-        the request's first choice; every decline consumes one hop, and the
-        backup policy fires once the hop limit is exhausted."""
+        the request's first choice (prefix affinity may pin that choice);
+        every decline consumes one hop, and the backup policy fires once
+        the hop limit is exhausted."""
         req = p.req
         n = len(self.drivers)
+        probe = p.prompt if p.enc_states is None else None
         while req.routing_hops <= self.policy.max_hops:
             d = self.drivers[(p.start + req.routing_hops) % n]
-            if d.verdict(now, req):
+            if d.verdict(now, req, probe):
                 if req.routing_hops > 0:
                     self._routed.add(req.rid)
                 d.enqueue(req, p.prompt, p.on_token, p.enc_states)
@@ -168,8 +194,7 @@ class ClusterFrontend:
         arrivals = [p for p in self.pending if p.req.arrival <= now]
         self.pending = [p for p in self.pending if p.req.arrival > now]
         for p in arrivals:
-            p.start = self._rr % len(self.drivers)
-            self._rr += 1
+            p.start = self._first_choice(p)
             self._route(p, now)
         n_exec = 0
         elapsed = 0.0

@@ -56,6 +56,11 @@ class EngineConfig:
     dtype: object = jnp.float32
     temperature: float = 0.0
     seed: int = 0
+    # Prefix sharing: published full pages are mapped into later requests
+    # with matching leading tokens (refcount + copy-on-write, kvcache.py).
+    # Auto-disabled for SSM-bearing models and per-request when encoder
+    # conditioning makes prompt KV depend on more than the token stream.
+    share_prefix: bool = True
 
 
 @dataclasses.dataclass
@@ -89,7 +94,8 @@ class ServingEngine:
                                  max_seqs=self.ecfg.max_slots,
                                  max_len=self.ecfg.max_len,
                                  dtype=self.ecfg.dtype,
-                                 budget=kv_budget)
+                                 budget=kv_budget,
+                                 share_prefix=self.ecfg.share_prefix)
         self.reqs: dict[int, RequestCtx] = {}
         self.key = jax.random.PRNGKey(self.ecfg.seed)
         self._moe_cf = (float(cfg.moe.n_experts) / cfg.moe.top_k
@@ -103,7 +109,12 @@ class ServingEngine:
         self._verify = jax.jit(self._verify_forward, donate_argnums=(2,))
         self.counters = {"prefill_calls": 0, "decode_calls": 0,
                          "decode_tokens": 0, "spec_draft_calls": 0,
-                         "spec_verify_calls": 0, "preemptions": 0}
+                         "spec_verify_calls": 0, "preemptions": 0,
+                         "prefix_hit_tokens": 0}
+        # fresh request-level progress granted by the last admission's
+        # prefix hit (hit tokens beyond preemption replay) — the driver
+        # advances the request by this right after add/restore/readmit
+        self.last_hit_fresh = 0
         # fresh (non-replay) prefill tokens consumed per rid in the last
         # execute() call — the frontend's source of truth for request-level
         # prefill progress (recompute prefill after preemption is engine
@@ -184,19 +195,48 @@ class ServingEngine:
         return cache, emitted.T, pos, done                # emitted: (B, S)
 
     # ------------------------------------------------------------------ #
+    def _share_tokens(self, tokens, enc_states):
+        """Prefix-sharing key for an admission, or None when sharing is
+        off or unsound for this request (encoder conditioning means the
+        prompt KV depends on more than the token stream)."""
+        if not self.ecfg.share_prefix or enc_states is not None:
+            return None
+        return tokens
+
+    def _consume_hit(self, ctx: RequestCtx, hit: int) -> int:
+        """Apply an admission-time prefix hit: the cache already holds
+        ``hit`` leading pending tokens, so they move to ``history``
+        (KV-content mirror) without a prefill.  Returns the fresh
+        request-level progress (hit beyond preemption replay)."""
+        self.last_hit_fresh = 0
+        if hit <= 0:
+            return 0
+        ctx.history.extend(ctx.pending[:hit])
+        ctx.pending = ctx.pending[hit:]
+        replayed = min(hit, ctx.replay)
+        ctx.replay -= replayed
+        self.counters["prefix_hit_tokens"] += hit
+        self.last_hit_fresh = hit - replayed
+        return self.last_hit_fresh
+
     def add_request(self, rid: int, prompt: list, expected_total: int,
                     enc_states=None) -> bool:
         """Admit a request: a sequence slot + pages for the expected
         context.  ``expected_total`` may over-reserve pages (a budget
         hint), but a prompt that cannot fit the per-sequence context cap
-        is rejected here rather than crashing mid-prefill."""
+        is rejected here rather than crashing mid-prefill.  With prefix
+        sharing, cached leading pages are mapped in (``counters[
+        "prefix_hit_tokens"]``) and their tokens never re-prefill."""
         if len(prompt) > self.ecfg.max_len:
             return False
-        if not self.kv.admit(rid, expected_total):
+        if not self.kv.admit(rid, expected_total,
+                             tokens=self._share_tokens(prompt, enc_states)):
             return False
-        self.reqs[rid] = RequestCtx(rid=rid, prompt=list(prompt),
-                                    pending=list(prompt), generated=[],
-                                    enc_states=enc_states)
+        ctx = RequestCtx(rid=rid, prompt=list(prompt),
+                         pending=list(prompt), generated=[],
+                         enc_states=enc_states)
+        self.reqs[rid] = ctx
+        self._consume_hit(ctx, self.kv.length(rid))
         return True
 
     def finish(self, rid: int) -> None:
@@ -228,10 +268,20 @@ class ServingEngine:
 
     def readmit(self, rid: int, expected_total: int) -> bool:
         """Re-reserve pages for a preempted request's recompute context
-        (``preempt`` kept its slot); False while the pool is still short."""
+        (``preempt`` kept its slot); False while the pool is still short.
+        Published pages of the victim's own history survive preemption in
+        the cached pool, so the replay typically re-shares them and only
+        the residual is re-prefilled."""
         if rid not in self.reqs or rid not in self.kv.seq_of:
             return False
-        return self.kv.extend(rid, expected_total)
+        ctx = self.reqs[rid]
+        hit = self.kv.resume(rid, expected_total,
+                             tokens=self._share_tokens(ctx.pending,
+                                                       ctx.enc_states))
+        if hit is None:
+            return False
+        self._consume_hit(ctx, hit)
+        return True
 
     def drop(self, rid: int):
         """Fully evict a request — pages AND sequence slot — returning its
@@ -249,9 +299,12 @@ class ServingEngine:
         over so the stream continues where it left off."""
         if len(ctx.pending) > self.ecfg.max_len:
             return False
-        if not self.kv.admit(rid, expected_total):
+        if not self.kv.admit(rid, expected_total,
+                             tokens=self._share_tokens(ctx.pending,
+                                                       ctx.enc_states)):
             return False
         self.reqs[rid] = ctx
+        self._consume_hit(ctx, self.kv.length(rid))
         return True
 
     def context_len(self, rid: int) -> int:
@@ -281,6 +334,19 @@ class ServingEngine:
                 return
         raise RuntimeError(f"request {rid}: out of KV pages")
 
+    def _cow_barrier(self, rid: int, start: int, n: int,
+                     on_pressure=None) -> None:
+        """Copy-on-write write barrier with the same pressure escape hatch
+        as ``_reserve``: a CoW copy that cannot grab a target page asks the
+        frontend to preempt best-effort victims, then retries once."""
+        try:
+            self.kv.ensure_writable(rid, start, n)
+        except RuntimeError:
+            if on_pressure is None:
+                raise
+            on_pressure(1)
+            self.kv.ensure_writable(rid, start, n)
+
     # ------------------------------------------------------------------ #
     def execute(self, batch: Batch, on_pressure=None) -> dict[int, list]:
         """Run one planner batch; returns {rid: emitted tokens}.
@@ -308,7 +374,7 @@ class ServingEngine:
             if batch.spec_step > 0 and self.spec is not None:
                 for rid, n in decode_rids:
                     emitted.setdefault(rid, []).extend(
-                        self.spec.decode(rid, n))
+                        self.spec.decode(rid, n, on_pressure))
             else:
                 out = self._decode_batched(dict(decode_rids), on_pressure)
                 for rid, toks in out.items():
@@ -329,6 +395,10 @@ class ServingEngine:
                 continue
             pos = self.kv.length(rid)
             self._reserve(rid, pos + L, on_pressure)
+            # CoW before pending is consumed: a failed copy leaves every
+            # prompt retryable, and the chunk below writes into pages this
+            # request owns exclusively
+            self._cow_barrier(rid, pos, L, on_pressure)
             recs.append((rid, ctx.pending[:L], pos))
         for rid, chunk, _ in recs:
             self.reqs[rid].pending = self.reqs[rid].pending[len(chunk):]
@@ -387,6 +457,9 @@ class ServingEngine:
             ctx.replay -= replayed
             self.last_prefill_progress[rid] = len(chunk) - replayed
             ctx.history.extend(chunk)
+            # publish completed prompt pages for later same-prefix
+            # requests; decode pages stay private (rollback may rewrite)
+            self.kv.register_prefix(rid, ctx.history)
             if not ctx.pending:
                 if ctx.recompute:
                     # recompute after preemption: the cache is restored
@@ -436,6 +509,7 @@ class ServingEngine:
             n = min(steps_of[r], self.kv.token_capacity(r) - cur)
             if n > 0:
                 self.kv.extend(r, cur + n)
+                self._cow_barrier(r, cur, n, on_pressure)
                 capped[r] = n
         steps_of = capped
         live = [r for r in live if r in capped]

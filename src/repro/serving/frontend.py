@@ -109,12 +109,31 @@ class ReplicaDriver:
         return min((r.arrival for r in self.new_q), default=None)
 
     # ----------------------------- routing ----------------------------- #
-    def verdict(self, now: float, req: Request) -> bool:
+    def verdict(self, now: float, req: Request,
+                prompt: Optional[list] = None) -> bool:
         """SLO-attainability probe (§4.2): would this replica's DP
-        scheduler admit ``req`` against its live state right now?"""
+        scheduler admit ``req`` against its live state right now?  With
+        ``prompt``, the probe credits this replica's cached prefix — the
+        verdict a prefix-affinity hop is after."""
         res = self.sched.plan(now, self.running, [req], self._mem_free(),
-                              admission_only=True)
+                              admission_only=True,
+                              cached_prefix=self._discounts([req], prompt))
         return any(r.rid == req.rid for r in res.admitted)
+
+    def _discounts(self, reqs: list[Request],
+                   prompt: Optional[list] = None) -> Optional[dict]:
+        """Cached-prefix discounts for the DP planner: tokens of each
+        request's prompt already resident as shared pages."""
+        kv = self.engine.kv
+        out = {}
+        for r in reqs:
+            if r.rid in self.encs:
+                continue      # enc-conditioned prompts never share
+            pr = prompt if prompt is not None else self.prompts.get(r.rid)
+            hit = kv.probe_prefix(pr) if pr is not None else 0
+            if hit:
+                out[r.rid] = hit
+        return out or None
 
     def _mem_free(self) -> int:
         # pages reclaimable by preempting the best-effort tier count as
@@ -134,9 +153,10 @@ class ReplicaDriver:
         res = DriveResult()
         arrivals = [r for r in self.new_q if r.arrival <= now]
         self.new_q = [r for r in self.new_q if r.arrival > now]
-        plan = self.sched.plan(now, self.running, arrivals, self._mem_free())
+        plan = self.sched.plan(now, self.running, arrivals, self._mem_free(),
+                               cached_prefix=self._discounts(arrivals))
         for r in plan.admitted:
-            if self._admit(r):
+            if self._admit(r, now):
                 r.state = RequestState.RUNNING
                 self.running.append(r)
             elif r.rid in self.prompts:
@@ -201,10 +221,12 @@ class ReplicaDriver:
         self.forget(r.rid)
 
     # -------------------- admission & victim selection ------------------ #
-    def _admit(self, r: Request) -> bool:
+    def _admit(self, r: Request, now: float) -> bool:
         """Engine admission with page-pressure preemption: a declined page
         reservation victimizes best-effort requests to free real device
-        pages, then retries."""
+        pages, then retries.  A prefix hit at admission is fresh request
+        progress the engine will never re-prefill, so the request advances
+        by it here (``engine.last_hit_fresh``)."""
         eng = self.engine
         prompt = self.prompts[r.rid]
         if not self._servable(r, prompt):
@@ -212,16 +234,21 @@ class ReplicaDriver:
             return False
         expected = r.total_tokens() + 8
         enc = self.encs.get(r.rid)
-        if eng.add_request(r.rid, prompt, expected, enc_states=enc):
-            return True
-        need = eng.kv.pages_needed(expected)
-        if need > eng.kv.free_pages:
-            self._preempt_for(need - eng.kv.free_pages)
-            if eng.add_request(r.rid, prompt, expected, enc_states=enc):
-                return True
-        if not eng.kv.free_seqs and self._evict_slot():
-            return eng.add_request(r.rid, prompt, expected, enc_states=enc)
-        return False
+        ok = eng.add_request(r.rid, prompt, expected, enc_states=enc)
+        if not ok:
+            # fresh demand is the full reservation minus LIVE shared-prefix
+            # pages (mapped by others, free to share); cached matches are
+            # already inside free_pages and must not be discounted twice
+            disc = eng.kv.live_prefix_pages(prompt) if enc is None else 0
+            need = eng.kv.pages_needed(expected) - disc
+            if need > eng.kv.free_pages:
+                self._preempt_for(need - eng.kv.free_pages)
+                ok = eng.add_request(r.rid, prompt, expected, enc_states=enc)
+            if not ok and not eng.kv.free_seqs and self._evict_slot():
+                ok = eng.add_request(r.rid, prompt, expected, enc_states=enc)
+        if ok:
+            self._advance_hit(r, now)
+        return ok
 
     def _servable(self, r: Request, prompt: list) -> bool:
         """A request whose FINAL context (all prefill + decode stages)
@@ -277,6 +304,13 @@ class ReplicaDriver:
         rest = sum(s.length for s in r.stages[r.stage_idx:])
         return max(rest - r.tokens_done, 0)
 
+    def _advance_hit(self, r: Request, t: float) -> None:
+        """Credit the request-level progress of an admission-time prefix
+        hit (cached tokens the engine will never re-prefill)."""
+        fresh = self.engine.last_hit_fresh
+        if fresh and r.in_prefill:
+            r.advance(fresh, t)
+
     def _emit(self, r: Request, toks: list, t: float) -> None:
         self.stats.tokens_out += len(toks)
         if toks and r.rid in self.streams:
@@ -316,6 +350,7 @@ class ReplicaDriver:
                 ctx = eng.reqs[rid]
                 r.kv_resident = True
                 r.state = RequestState.BEST_EFFORT
+                self._advance_hit(r, t)
             elif not r.kv_resident:
                 # preempted: re-reserve pages, then replay the recompute
                 # prefill below (re-queued for re-prefill).  Hysteresis
@@ -332,6 +367,7 @@ class ReplicaDriver:
                     continue
                 r.kv_resident = True
                 r.state = RequestState.BEST_EFFORT
+                self._advance_hit(r, t)
             while budget > 0 and ctx.pending:
                 cap = eng.kv.token_capacity(rid) - eng.kv.length(rid)
                 take = min(budget, len(ctx.pending), max(cap, 0))
@@ -339,7 +375,15 @@ class ReplicaDriver:
                     break
                 b = Batch()
                 b.add(rid, StageKind.PREFILL, take)
-                out = eng.execute(b)
+                try:
+                    out = eng.execute(b)
+                except RuntimeError:
+                    # a copy-on-write target exceeded the capacity cap
+                    # (token_capacity counts mapped+free pages, not the
+                    # extra CoW page): the best-effort tier never crashes
+                    # the loop — back off until pages free up (the raise
+                    # fired before any pending tokens were consumed)
+                    break
                 budget -= take
                 worked = True
                 prog = eng.last_prefill_progress.get(rid, 0)
@@ -355,7 +399,10 @@ class ReplicaDriver:
                 n = min(budget, r.remaining_in_stage)
                 b = Batch()
                 b.add(rid, StageKind.DECODE, n)
-                out = eng.execute(b).get(rid, [])
+                try:
+                    out = eng.execute(b).get(rid, [])
+                except RuntimeError:
+                    break                # CoW page short: back off
                 if not out:
                     break                # page-capped: wait for free pages
                 budget -= len(out)

@@ -14,10 +14,52 @@ lengths.  Allocation / release / preemption keep the host free list and
 the device block tables in lockstep; speculative-decode rollback is a
 pure length decrement (``truncate``) — pages stay mapped, later tokens
 simply overwrite them.
+
+Shared-prefix pages (refcount / copy-on-write contract)
+-------------------------------------------------------
+With ``share_prefix=True`` the pool is prefix-shared across requests
+(multi-stage agentic workloads resend a common system prompt on every
+request, §2.1 scenarios):
+
+* Every physical page carries a **refcount**: the number of request block
+  tables it is mapped into.  The shared budget and ``used_pages`` count a
+  page exactly once, while it has refcount >= 1; the budget is credited
+  only when the refcount returns to zero — never per-table — so sharing
+  can never double-count (or double-credit) the cluster budget.
+* A **prefix index** maps a page-granularity token-chain hash
+  (``h_i = hash(h_{i-1}, tokens[i*ps:(i+1)*ps])`` from position 0) to the
+  page holding that chain's KV.  Pages are *published* into the index by
+  ``register_prefix`` only once fully written by a prefill (decode-only
+  pages are never published: speculative rollback may rewrite them).
+  Published pages are immutable; positions and tokens fully determine
+  their content, so any request whose leading tokens match the chain may
+  map them.  (Chain keys are 64-bit hash chains; adversarial collisions
+  are out of scope at repro scale.)
+* ``admit``/``resume`` match the longest published chain (capped at
+  ``len(tokens) - 1`` so at least one token remains to prefill — the
+  completion sample needs a real forward) and map those pages into the
+  new request's block table with refcount bumps; only the residual pages
+  are freshly allocated.  A preempted victim's published pages survive
+  preemption in the cached pool, so its recompute replay re-shares them.
+* **Copy-on-write**: ``ensure_writable`` is the write barrier the engine
+  invokes before any KV write.  A write touching a page with refcount > 1
+  device-copies the page into a fresh one and remaps this request's block
+  table (the other owners keep the original); a write touching an
+  exclusively-owned but published page simply unpublishes it (its content
+  is about to change).  Chains broken by unpublishing leave downstream
+  entries unreachable until re-registered or LRU-evicted — never stale.
+* ``release``/``preempt`` drop one reference per page.  A zero-refcount
+  *published* page is not freed: it moves to an **LRU cached pool**
+  (content intact, still matchable).  Allocation draws from the free list
+  first and then evicts cached pages oldest-released-first, unpublishing
+  them.  ``free_pages`` therefore counts free + cached (both allocatable
+  now), and an idle pool with warm cache still reports
+  ``used_pages == 0``.
 """
 from __future__ import annotations
 
 import math
+from collections import OrderedDict
 from typing import Optional
 
 import jax
@@ -28,6 +70,13 @@ from repro.models.config import ModelConfig
 from repro.models.transformer import init_paged_cache
 
 
+def _copy_bucket(n: int, buckets=(1, 2, 4, 8)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return ((n + 7) // 8) * 8
+
+
 class SharedPageBudget:
     """Cluster-wide KV page budget shared by several PagedKVManagers.
 
@@ -36,7 +85,9 @@ class SharedPageBudget:
     aggregate KV footprint below the sum of the per-replica pools (§4.2
     multi-replica serving against one memory budget).  Conservation
     invariant: ``used`` always equals the sum of ``used_pages`` over the
-    attached managers.
+    attached managers — with prefix sharing, a page mapped into several
+    block tables is counted once (reserved when its refcount leaves zero,
+    credited when it returns to zero).
     """
 
     def __init__(self, total_pages: int):
@@ -127,13 +178,19 @@ class PagedKVManager(PageAllocator):
       * ``block_tables`` — (max_seqs, max_pages_per_seq) int32, row s maps
                            sequence-slot s's logical pages to pool pages.
     Host mirrors: ``seq_len`` (np.int64 per slot), ``seq_of`` (rid→slot),
-    and the inherited free list / page tables.
+    per-page ``refcount``, the prefix index + LRU cached pool (module
+    docstring), and the inherited free list / page tables.
+
+    Prefix sharing is disabled for SSM-bearing models: skipping a cached
+    prefill chunk would skip the (unpaged, lane-resident) SSM state
+    updates it performs, so a hit cannot be made exact there.
     """
 
     def __init__(self, cfg: ModelConfig, *, total_pages: int,
                  page_size: int = 16, max_seqs: int = 8,
                  max_len: int = 512, dtype=jnp.float32,
-                 budget: Optional[SharedPageBudget] = None):
+                 budget: Optional[SharedPageBudget] = None,
+                 share_prefix: bool = False):
         super().__init__(total_pages, page_size, budget=budget)
         self.cfg = cfg
         self.max_seqs = max_seqs
@@ -146,6 +203,91 @@ class PagedKVManager(PageAllocator):
         self.seq_len = np.zeros((max_seqs,), np.int64)
         self.free_seqs = list(range(max_seqs - 1, -1, -1))
         self.seq_of: dict[int, int] = {}
+        # ---- prefix sharing state (module docstring) ----
+        self.share_prefix = share_prefix and not any(
+            kind == "ssm" for kind, _ in cfg.segments())
+        self.refcount = np.zeros((total_pages,), np.int32)
+        self.prefix_index: dict[int, int] = {}       # chain hash -> page
+        self.page_key: dict[int, int] = {}           # page -> chain hash
+        self.cached: OrderedDict[int, int] = OrderedDict()  # LRU, zero-ref
+        # per-rid registration cursor: (full pages processed, chain hash
+        # there) so repeated register_prefix calls hash incrementally
+        self._reg_state: dict[int, tuple[int, Optional[int]]] = {}
+        self.cow_copies = 0
+        self.pages_grabbed = 0
+        self.prefix_evictions = 0
+        self._copy_fn = None         # jitted CoW page copy, built lazily
+
+    # ------------------------ physical page ops ------------------------- #
+    @property
+    def used_pages(self) -> int:
+        """Pages some live request holds (refcount >= 1) — cached
+        zero-refcount pages are reclaimable and do not count."""
+        return self.total_pages - len(self.free) - len(self.cached)
+
+    @property
+    def free_pages(self) -> int:
+        avail = len(self.free) + len(self.cached)
+        if self.budget is None:
+            return avail
+        return min(avail, self.budget.available)
+
+    def _grab_pages(self, n: int) -> Optional[list[int]]:
+        """Take n physical pages: free list first, then LRU eviction of
+        zero-refcount cached pages (unpublishing them).  Reserves the
+        shared budget; None (nothing taken) if pages or budget are short."""
+        if n <= 0:
+            return []
+        if n > len(self.free) + len(self.cached):
+            return None
+        if self.budget is not None and not self.budget.reserve(n):
+            return None
+        out = []
+        for _ in range(n):
+            if self.free:
+                p = self.free.pop()
+            else:
+                p, key = self.cached.popitem(last=False)   # LRU victim
+                del self.prefix_index[key]
+                del self.page_key[p]
+                self.prefix_evictions += 1
+            self.refcount[p] = 1
+            out.append(p)
+        self.pages_grabbed += n
+        return out
+
+    def _unref(self, p: int) -> int:
+        """Drop one reference to page p.  Returns 1 when the page became
+        physically reclaimable (refcount hit zero) — the only moment the
+        shared budget is credited, so shared pages can never double-credit
+        it.  Published pages retire to the LRU cached pool instead of the
+        free list (content stays matchable)."""
+        self.refcount[p] -= 1
+        assert self.refcount[p] >= 0, f"page {p} refcount underflow"
+        if self.refcount[p] > 0:
+            return 0
+        if self.budget is not None:
+            self.budget.release(1)
+        key = self.page_key.get(p)
+        if key is not None:
+            self.cached[p] = key
+        else:
+            self.free.append(p)
+        return 1
+
+    def _drop_pages(self, rid: int) -> int:
+        """Unmap all of rid's pages (keep the rid entry and slot);
+        returns pages physically freed (refcount hit zero)."""
+        n = 0
+        for p in reversed(self.tables.get(rid, [])):
+            n += self._unref(p)
+        self.tables[rid] = []
+        self._reg_state.pop(rid, None)
+        s = self.seq_of.get(rid)
+        if s is not None:
+            self.block_tables = self.block_tables.at[s].set(0)
+            self.seq_len[s] = 0
+        return n
 
     # --------------------------- seq slots ----------------------------- #
     def acquire(self, rid: int) -> Optional[int]:
@@ -159,20 +301,55 @@ class PagedKVManager(PageAllocator):
         self.block_tables = self.block_tables.at[s].set(0)
         return s
 
-    def admit(self, rid: int, expected_total: int) -> bool:
+    def admit(self, rid: int, expected_total: int, tokens=None) -> bool:
         """Admission = a sequence slot + pages for the expected context.
 
         ``expected_total`` is the request's full expected memory demand
         (the paper's admission budget) and is reserved in full even when
         it exceeds the per-sequence mappable window (max_len) — the
         surplus pages are a deliberate reservation against the shared
-        pool, exactly like the seed's logical allocator, not a leak."""
-        if not self.can_allocate(expected_total):
-            return False
+        pool, exactly like the seed's logical allocator, not a leak.
+
+        With ``tokens`` (the request's prompt) and prefix sharing on, the
+        longest published chain is mapped in first with refcount bumps;
+        only the residual demand draws fresh pages, and ``length(rid)``
+        reports the hit so the engine can skip the cached chunk."""
+        fresh_slot = rid not in self.seq_of
         if self.acquire(rid) is None:
             return False
-        self.allocate(rid, expected_total)
+        hit = 0
+        if self.share_prefix and tokens is not None:
+            hit = self._share_pages(rid, tokens)
+        if not self.extend(rid, expected_total):
+            self._drop_pages(rid)
+            if fresh_slot:
+                # decline leaves no trace: a bounced request may never
+                # come back to this manager
+                self.tables.pop(rid, None)
+                self.free_seqs.append(self.seq_of.pop(rid))
+            return False
+        self.seq_len[self.seq_of[rid]] = hit
         return True
+
+    def resume(self, rid: int, expected_total: int,
+               tokens=None) -> Optional[int]:
+        """Re-reserve pages for a preempted request's recompute context
+        (``preempt`` kept its slot and emptied its table), re-sharing any
+        still-published prefix of ``tokens`` (its replay stream).  Returns
+        the hit length, or None while the pool is short — in which case
+        nothing stays mapped, so the retry starts clean."""
+        if rid not in self.seq_of:
+            return None
+        hit = 0
+        if self.share_prefix and tokens is not None \
+                and not self.tables.get(rid):
+            hit = self._share_pages(rid, tokens)
+        if not self.extend(rid, expected_total):
+            if hit:
+                self._drop_pages(rid)
+            return None
+        self.seq_len[self.seq_of[rid]] = hit
+        return hit
 
     # ------------------ page ops (device table in lockstep) ------------ #
     def _map_pages(self, rid: int, start: int, pages: list[int]) -> None:
@@ -185,39 +362,40 @@ class PagedKVManager(PageAllocator):
 
     def allocate(self, rid: int, n_tokens: int) -> Optional[list[int]]:
         have = len(self.tables.get(rid, []))
-        pages = super().allocate(rid, n_tokens)
-        if pages:
-            self._map_pages(rid, have, pages)
+        pages = self._grab_pages(self.pages_needed(n_tokens))
+        if pages is None:
+            return None
+        self.tables.setdefault(rid, []).extend(pages)
+        self._map_pages(rid, have, pages)
         return pages
 
     def extend(self, rid: int, new_total_tokens: int) -> bool:
         have = len(self.tables.get(rid, []))
-        if not super().extend(rid, new_total_tokens):
+        need = self.pages_needed(new_total_tokens)
+        if need <= have:
+            return True
+        pages = self._grab_pages(need - have)
+        if pages is None:
             return False
-        new = self.tables.get(rid, [])[have:]
-        if new:
-            self._map_pages(rid, have, new)
+        self.tables.setdefault(rid, []).extend(pages)
+        self._map_pages(rid, have, pages)
         return True
 
     def release(self, rid: int) -> int:
-        n = super().release(rid)
+        n = self._drop_pages(rid)
+        self.tables.pop(rid, None)
         s = self.seq_of.pop(rid, None)
         if s is not None:
-            self.block_tables = self.block_tables.at[s].set(0)
-            self.seq_len[s] = 0
             self.free_seqs.append(s)
         return n
 
     def preempt(self, rid: int) -> int:
-        """Victimize a request: free its pages (and KV content) but keep
-        its sequence slot so it can be re-prefilled after re-admission."""
-        n = super().release(rid)
-        self.tables[rid] = []
-        s = self.seq_of.get(rid)
-        if s is not None:
-            self.block_tables = self.block_tables.at[s].set(0)
-            self.seq_len[s] = 0
-        return n
+        """Victimize a request: drop its page references (and, for pages
+        nobody else shares, their budget) but keep its sequence slot so it
+        can be re-prefilled after re-admission.  Its published pages
+        retire to the cached pool, so the recompute replay re-shares them.
+        Returns pages physically freed (reclaimable now)."""
+        return self._drop_pages(rid)
 
     def truncate(self, rid: int, n_tokens: int) -> None:
         """Roll back the last n cache positions (spec-decode rejection):
@@ -232,6 +410,190 @@ class PagedKVManager(PageAllocator):
         pages plus the whole free list, capped by the block-table width."""
         have = len(self.tables.get(rid, []))
         return min(self.max_len, (have + self.free_pages) * self.page_size)
+
+    # ------------------------- prefix sharing --------------------------- #
+    @staticmethod
+    def _chain(parent: Optional[int], chunk) -> int:
+        return hash((parent, tuple(int(t) for t in chunk)))
+
+    def probe_prefix(self, tokens) -> int:
+        """Longest published prefix (in tokens) ``_share_pages`` would
+        actually map for this stream right now, capped at
+        ``len(tokens) - 1``.  Read-only: the DP planner's cached-prefix
+        discount and the cluster's prefix-affinity routing probe with this
+        before any pages move.  Mirrors ``_share_pages``' budget
+        truncation — reviving a cached (zero-ref) page costs one budget
+        page, so a budget-starved replica reports only the hit it can
+        deliver (an optimistic probe would admit tight-TTFT requests on a
+        residual the engine then can't grant)."""
+        pages, hit = self._match_pages(tokens)
+        if not pages:
+            return 0
+        avail = self.budget.available if self.budget is not None else None
+        usable = 0
+        for p in pages:
+            if self.refcount[p] > 0:
+                usable += 1
+            elif avail is None or avail > 0:
+                if avail is not None:
+                    avail -= 1
+                usable += 1
+            else:
+                break
+        return min(hit, usable * self.page_size)
+
+    def live_prefix_pages(self, tokens) -> int:
+        """Matched prefix pages currently mapped by other requests.  These
+        cost no free-pool capacity to share; cached (zero-ref) matches DO
+        — they already count inside ``free_pages`` — so admission-demand
+        discounts must use this, not the full hit."""
+        pages, _ = self._match_pages(tokens)
+        return int(sum(1 for p in pages if self.refcount[p] > 0))
+
+    def _match_pages(self, tokens) -> tuple[list[int], int]:
+        """(pages, hit_tokens) of the longest published chain for
+        ``tokens`` — the last page may be consumed partially when the
+        ``len - 1`` cap bites (its overwrite then goes through CoW)."""
+        if not self.share_prefix or tokens is None or len(tokens) < 2:
+            return [], 0
+        ps = self.page_size
+        h, pages = None, []
+        for i in range(len(tokens) // ps):
+            h = self._chain(h, tokens[i * ps:(i + 1) * ps])
+            p = self.prefix_index.get(h)
+            if p is None:
+                break
+            pages.append(p)
+        hit = min(len(pages) * ps, len(tokens) - 1)
+        return pages[:self.pages_needed(hit) if hit else 0], hit
+
+    def _share_pages(self, rid: int, tokens) -> int:
+        """Map the longest published chain into rid's (empty) block table
+        with refcount bumps.  Reviving a cached (zero-ref) page re-reserves
+        one budget page; a failed reservation truncates the hit there."""
+        pages, hit = self._match_pages(tokens)
+        taken: list[int] = []
+        for p in pages:
+            if self.refcount[p] > 0:
+                self.refcount[p] += 1
+            elif self.budget is None or self.budget.reserve(1):
+                self.cached.pop(p)
+                self.refcount[p] = 1
+            else:
+                break
+            taken.append(p)
+        if len(taken) < len(pages):
+            hit = min(hit, len(taken) * self.page_size)
+        if not taken:
+            return 0
+        self.tables.setdefault(rid, []).extend(taken)
+        self._map_pages(rid, 0, taken)
+        return hit
+
+    def register_prefix(self, rid: int, tokens) -> None:
+        """Publish rid's full, final pages into the prefix index.  Call
+        only after prefill writes (`tokens` = the exact cache content):
+        decode-tail pages stay private, since speculative rollback may
+        rewrite them.  Chains already published (by any page) are kept —
+        duplicates are deduped toward the first publisher.  A per-rid
+        cursor resumes the chain hash where the last call stopped, so a
+        request prefilled in many chunks hashes each page once (the
+        cursor resets with the table on preempt/release)."""
+        if not self.share_prefix:
+            return
+        pages = self.tables.get(rid, [])
+        ps = self.page_size
+        done, h = self._reg_state.get(rid, (0, None))
+        n_full = min(len(tokens) // ps, len(pages))
+        for i in range(done, n_full):
+            h = self._chain(h, tokens[i * ps:(i + 1) * ps])
+            p = pages[i]
+            if h in self.prefix_index or p in self.page_key:
+                continue
+            self.prefix_index[h] = p
+            self.page_key[p] = h
+        if n_full > done:
+            self._reg_state[rid] = (n_full, h)
+
+    def ensure_writable(self, rid: int, start_tok: int,
+                        n_tokens: int) -> None:
+        """Copy-on-write barrier: before rid writes cache positions
+        ``[start_tok, start_tok + n_tokens)``, make every touched page
+        exclusively owned and unpublished.  Shared pages are device-copied
+        into fresh pages and rid's block table is remapped (other owners
+        keep the original); an exclusively-owned published page is just
+        unpublished (its content is about to change).  Transactional: all
+        copy targets are grabbed up front, so the RuntimeError raised when
+        they cannot be leaves no state mutated and the barrier can simply
+        be retried after the caller frees pages."""
+        if not self.share_prefix or n_tokens <= 0:
+            return
+        pages = self.tables.get(rid, [])
+        ps = self.page_size
+        first = start_tok // ps
+        last = min((start_tok + n_tokens - 1) // ps, len(pages) - 1)
+        idx = [i for i in range(first, last + 1)
+               if self.refcount[pages[i]] > 1]
+        fresh = self._grab_pages(len(idx)) if idx else []
+        if fresh is None:
+            raise RuntimeError(
+                f"request {rid}: out of KV pages for copy-on-write")
+        for i in range(first, last + 1):
+            p = pages[i]
+            if self.refcount[p] <= 1 and p in self.page_key:
+                del self.prefix_index[self.page_key.pop(p)]
+        src, dst = [], []
+        for i, q in zip(idx, fresh):
+            p = pages[i]
+            self.refcount[p] -= 1            # still shared by the others
+            pages[i] = q
+            src.append(p)
+            dst.append(q)
+        if not src:
+            return
+        self._copy_pages(src, dst)
+        s = self.seq_of.get(rid)
+        if s is not None:
+            cols = [i for i in idx if i < self.max_pages_per_seq]
+            if cols:
+                vals = [pages[i] for i in cols]
+                self.block_tables = self.block_tables.at[
+                    s, jnp.asarray(cols, jnp.int32)].set(
+                    jnp.asarray(vals, jnp.int32))
+        self.cow_copies += len(src)
+
+    def _copy_pages(self, src: list[int], dst: list[int]) -> None:
+        """Device copy src pages onto dst pages in every paged pool leaf
+        (SSM lane state is not paged and has nothing to copy).  One jitted
+        call whose pool argument is DONATED — XLA scatters the few pages
+        in place instead of materializing a fresh full-size pool per leaf.
+        Copy counts are bucketed — padded by repeating the last real
+        (src, dst) pair, which rewrites the same value and so stays
+        deterministic under duplicate scatter indices — so CoW batch
+        sizes share compilations."""
+        if self._copy_fn is None:
+            axes = [None if kind == "ssm" else (1 if n > 1 else 0)
+                    for kind, n in self.cfg.segments()]
+
+            def run(pools, si, di):
+                out = []
+                for pool, ax in zip(pools, axes):
+                    if ax is None:
+                        out.append(pool)
+                        continue
+
+                    def cp(leaf, ax=ax):
+                        if ax == 0:
+                            return leaf.at[di].set(leaf[si])
+                        return leaf.at[:, di].set(leaf[:, si])
+                    out.append(jax.tree.map(cp, pool))
+                return out
+            self._copy_fn = jax.jit(run, donate_argnums=(0,))
+        B = _copy_bucket(len(src))
+        pad = B - len(src)
+        si = jnp.asarray(src + [src[-1]] * pad, jnp.int32)
+        di = jnp.asarray(dst + [dst[-1]] * pad, jnp.int32)
+        self.pools = self._copy_fn(self.pools, si, di)
 
     # ------------------------ device-facing views ----------------------- #
     def table_rows(self, slots) -> jnp.ndarray:

@@ -104,21 +104,27 @@ class SpecDecoder:
         self.engine.counters["spec_draft_calls"] += 1
 
     # ------------------------------------------------------------------ #
-    def decode(self, rid: int, n_tokens: int) -> list:
+    def decode(self, rid: int, n_tokens: int, on_pressure=None) -> list:
         """One verify cycle processing ``n_tokens`` target tokens
-        (= sl drafts + 1); returns the emitted tokens."""
+        (= sl drafts + 1); returns the emitted tokens.  ``on_pressure``
+        is the engine's page-exhaustion callback, threaded into the
+        verify reservation / copy-on-write barrier and the plain-decode
+        fallbacks so spec cycles can preempt best-effort victims like
+        any other decode."""
         eng = self.engine
         sl = max(n_tokens - 1, 0)
         if sl == 0:
-            return list(eng._decode_batched([rid])[rid])
+            return list(eng._decode_batched([rid], on_pressure)[rid])
         if self.kv.acquire(rid) is None:
-            return list(eng._decode_batched({rid: n_tokens})[rid])
+            return list(eng._decode_batched({rid: n_tokens},
+                                            on_pressure)[rid])
         seq = self._seq(rid)
         # near the context/page limit the verify window no longer fits:
         # fall back to plain decode, which caps its budget gracefully
         if (eng.kv.token_capacity(rid) < len(seq) + sl
                 or self.kv.token_capacity(rid) < len(seq) - 1 + sl):
-            return list(eng._decode_batched({rid: n_tokens})[rid])
+            return list(eng._decode_batched({rid: n_tokens},
+                                            on_pressure)[rid])
         dpos = self.kv.length(rid)
         if dpos < len(seq) - 1:                # sync draft up to seq[:-1]
             self._draft_catch_up(rid, seq[dpos:len(seq) - 1])
@@ -144,7 +150,15 @@ class SpecDecoder:
         Lp = _bucket(L)
         tslot = eng.kv.seq_of[rid]
         tpos = eng.kv.length(rid)
-        eng._reserve(rid, tpos + L)
+        eng._reserve(rid, tpos + L, on_pressure)
+        try:
+            eng._cow_barrier(rid, tpos, L, on_pressure)
+        except RuntimeError:
+            # no page for a copy-on-write target: undo the draft extension
+            # and fall back to plain decode, which caps gracefully
+            self.kv.truncate(rid, sl)
+            return list(eng._decode_batched({rid: n_tokens},
+                                            on_pressure)[rid])
         buf = np.zeros((1, Lp), np.int32)
         buf[0, :L] = verify_in
         ttoks, tcache = eng._verify(

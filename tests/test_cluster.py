@@ -53,8 +53,8 @@ def test_routing_probes_replicas_in_order_then_backs_up():
     cl = make_cluster(n=3, policy=RoutingPolicy(max_hops=2))
     probed = []
     for d in cl.drivers:
-        d.verdict = (lambda i: lambda now, req: (probed.append(i), False)[1]
-                     )(d.idx)
+        d.verdict = (lambda i: lambda now, req, prompt=None:
+                     (probed.append(i), False)[1])(d.idx)
     req = simple_request(1, 0.0, prompt=8, output=4,
                          ttft_slowdown=4.0, tpot=0.1)
     cl.submit(req)
@@ -72,7 +72,7 @@ def test_routing_probes_replicas_in_order_then_backs_up():
 
 def test_routing_assigns_first_accepting_replica():
     cl = make_cluster(n=3, policy=RoutingPolicy(max_hops=2))
-    cl.drivers[0].verdict = lambda now, req: False
+    cl.drivers[0].verdict = lambda now, req, prompt=None: False
     req = simple_request(7, 0.0, prompt=8, output=4,
                          ttft_slowdown=6.0, tpot=0.1)
     cl.submit(req)
@@ -88,8 +88,8 @@ def test_hop_limit_respected_and_backup_decline_drops():
                                                 backup="decline"))
     probed = []
     for d in cl.drivers:
-        d.verdict = (lambda i: lambda now, req: (probed.append(i), False)[1]
-                     )(d.idx)
+        d.verdict = (lambda i: lambda now, req, prompt=None:
+                     (probed.append(i), False)[1])(d.idx)
     cl.submit(simple_request(1, 0.0, prompt=8, output=4,
                              ttft_slowdown=4.0, tpot=0.1))
     cl.step()
@@ -114,10 +114,15 @@ def test_unservable_total_context_dropped_not_livelocked():
 
 # --------------------- (b) preemption invariants ------------------------ #
 def test_preempt_returns_all_pages_and_replays_identical_stream():
+    # share_prefix off: this guards the PURE recompute contract (every
+    # page literally on the free list, full-history replay); the re-share
+    # fast path is covered by test_paged_kv.py::
+    # test_preemption_replay_reshares_prefix
     def fresh():
         return ServingEngine(CFG, PARAMS,
                              EngineConfig(max_slots=4, max_len=128,
-                                          total_pages=32, page_size=4))
+                                          total_pages=32, page_size=4,
+                                          share_prefix=False))
 
     rng = np.random.default_rng(0)
     prompt = rng.integers(0, CFG.vocab, 20).tolist()
@@ -165,9 +170,12 @@ def test_decode_pressure_callback_preempts_victims():
     engine users (``expected_total`` is a hint, per the seed API) and for
     speculation windows beyond the admission headroom — it must preempt
     victims and let decode run past what capping alone would emit."""
+    # share_prefix off: the two prompts are identical, and sharing would
+    # (correctly) dodge the page exhaustion this test must provoke
     eng = ServingEngine(CFG, PARAMS,
                         EngineConfig(max_slots=4, max_len=64,
-                                     total_pages=8, page_size=4))
+                                     total_pages=8, page_size=4,
+                                     share_prefix=False))
     # victim (a resident best-effort request) holds half the pool
     assert eng.add_request(9, list(range(1, 13)), expected_total=16)
     b = Batch()
@@ -226,6 +234,127 @@ def test_shared_budget_conservation_across_managers():
     m1.release(2)
     check()
     assert budget.used == 0
+
+
+def test_shared_budget_conservation_with_prefix_sharing():
+    """Budget is credited only for PHYSICALLY freed (zero-refcount) pages:
+    preempting/releasing one holder of shared pages must not double-credit
+    the cluster budget, and ``sum(used_pages) == budget.used`` holds at
+    every step of the sharing lifecycle (a violation would also trip the
+    underflow assert inside SharedPageBudget.release)."""
+    budget = SharedPageBudget(24)
+    mgrs = [PagedKVManager(CFG, total_pages=16, page_size=4, max_seqs=4,
+                           max_len=64, budget=budget, share_prefix=True)
+            for _ in range(2)]
+
+    def check():
+        assert sum(m.used_pages for m in mgrs) == budget.used
+        assert 0 <= budget.used <= budget.total_pages
+
+    m0, m1 = mgrs
+    toks = list(range(500, 516))               # 16 tokens = 4 pages
+    assert m0.admit(1, 16, tokens=toks)        # 4 fresh pages
+    m0.register_prefix(1, toks)
+    check()
+    assert budget.used == 4
+    assert m0.admit(2, 16, tokens=toks)        # full prefix hit: 0 fresh
+    assert m0.length(2) == 15
+    check()
+    assert budget.used == 4                    # shared pages counted ONCE
+    assert m0.preempt(1) == 0                  # rid 2 still holds them:
+    check()                                    # nothing freed, no credit
+    assert budget.used == 4
+    assert m0.release(2) == 4                  # zero-ref: credited once,
+    check()                                    # pages retire to the cache
+    assert budget.used == 0
+    assert m0.admit(3, 16, tokens=toks)        # revive from cache:
+    assert m0.length(3) == 15                  # re-reserves the budget
+    check()
+    assert budget.used == 4
+    # a sibling replica can spend the budget the cached pages released
+    assert not m1.admit(4, 80)                 # 20 pages > available: no
+    check()
+    assert m1.admit(4, 64)                     # 16 pages: exactly fits 20/24
+    check()
+    m0.release(1)
+    m0.release(3)
+    m1.release(4)
+    check()
+    assert budget.used == 0
+
+
+def test_dp_admits_under_ttft_only_with_cached_prefix_discount():
+    """Acceptance: under background decode load the DP declines a request
+    whose FULL prefill cannot meet its TTFT deadline, but admits it when
+    the cached-prefix discount shrinks the residual prefill below the
+    deadline's token budget."""
+    from repro.core.request import RequestState
+    from repro.core.scheduler import SLOsServeScheduler
+    sched = SLOsServeScheduler(VIRT, SchedulerConfig(
+        page_size=4, prefill_emits_first_token=True))
+
+    def running_decode(rid):
+        # mid-decode request eating the per-batch token budget
+        r = simple_request(rid, 0.0, prompt=8, output=50,
+                           ttft_slowdown=8.0, tpot=0.05)
+        r.state = RequestState.RUNNING
+        r.stage_idx = 1
+        r.tokens_done = 1
+        r.token_times = [0.0]
+        r.stage_complete_times = [0.0]
+        return r
+
+    def probe(cached_prefix):
+        running = [running_decode(100 + i) for i in range(3)]
+        req = simple_request(1, 0.0, prompt=40, output=4,
+                             ttft_slowdown=1.05, tpot=0.15)
+        res = sched.plan(0.0, running, [req], mem_free=100,
+                         admission_only=True, cached_prefix=cached_prefix)
+        return [r.rid for r in res.admitted]
+
+    assert probe(None) == []                 # full 40-token prefill: late
+    assert probe({1: 24}) == [1]             # 16-token residual: in time
+
+
+def test_prefix_affinity_routes_to_warm_replica():
+    """Prefix-affinity first choice: a request whose prompt prefix is
+    cached on replica 0 probes replica 0 first even though round-robin
+    would have started it on replica 1."""
+    cl = make_cluster(n=2)
+    rng = np.random.default_rng(9)
+    family = rng.integers(1, CFG.vocab, 24).tolist()
+
+    def submit(rid, t):
+        cl.submit(simple_request(rid, t, prompt=24, output=4,
+                                 ttft_slowdown=8.0, tpot=0.15),
+                  prompt=list(family))
+
+    submit(1, 0.0)                     # round-robin: lands on replica 0
+    cl.run_until_idle()
+    assert cl.drivers[0].stats.served == 1
+    assert cl.drivers[0].engine.kv.cached    # published pages stay warm
+
+    submit(2, cl.clock)                # rr would start at replica 1...
+    cl.run_until_idle()
+    assert cl.stats.affinity_routed == 1     # ...affinity pinned replica 0
+    assert cl.drivers[0].stats.served == 2
+    assert cl.drivers[1].stats.served == 0
+    assert cl.drivers[0].engine.counters["prefix_hit_tokens"] >= 20
+    assert cl.budget.used == 0
+
+    # with the hint off, the same second request round-robins to replica 1
+    cl2 = make_cluster(n=2, policy=RoutingPolicy(max_hops=1,
+                                                 prefix_affinity=False))
+    cl2.submit(simple_request(1, 0.0, prompt=24, output=4,
+                              ttft_slowdown=8.0, tpot=0.15),
+               prompt=list(family))
+    cl2.run_until_idle()
+    cl2.submit(simple_request(2, cl2.clock, prompt=24, output=4,
+                              ttft_slowdown=8.0, tpot=0.15),
+               prompt=list(family))
+    cl2.run_until_idle()
+    assert cl2.stats.affinity_routed == 0
+    assert cl2.drivers[1].stats.served == 1
 
 
 # -------------------------- acceptance e2e ------------------------------ #

@@ -108,6 +108,47 @@ def test_paged_attention_matches_ref(B, H, KV, hd, page, max_pages, dtype):
                                atol=tol, rtol=tol)
 
 
+@pytest.mark.parametrize("window", [1, 7, 16, 33, 1000])
+def test_paged_attention_sliding_window_matches_ref(window):
+    """Window masking in the paged kernel (including the dynamic page-skip
+    loop bounds) must agree with the masked gather reference — windows
+    smaller than, straddling, and larger than the whole context."""
+    B, H, KV, hd, page, max_pages = 3, 4, 2, 32, 8, 6
+    rng = np.random.default_rng(1)
+    n_pages = B * max_pages + 4
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (B, H, hd), jnp.float32)
+    k_pages = _rand(k2, (n_pages, page, KV, hd), jnp.float32)
+    v_pages = _rand(k3, (n_pages, page, KV, hd), jnp.float32)
+    perm = rng.permutation(n_pages)[:B * max_pages]
+    table = jnp.asarray(perm.reshape(B, max_pages), jnp.int32)
+    seq_lens = jnp.asarray([1, 19, max_pages * page], jnp.int32)
+    out = ops.paged_attention(q, k_pages, v_pages, table, seq_lens,
+                              window=window, interpret=True)
+    want = ref_paged_decode(q, k_pages, v_pages, table, seq_lens,
+                            window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+    # garbage outside the window must not leak: poisoning every key below
+    # the window boundary leaves the output unchanged
+    if window < 8:
+        poison = k_pages * 0 + 1e4
+        pos = jnp.arange(max_pages * page)
+        kp, vp = k_pages, v_pages
+        for b in range(B):
+            sel = np.asarray(table[b])
+            m = np.asarray(pos < seq_lens[b] - window).reshape(
+                max_pages, page)
+            for i, pid in enumerate(sel):
+                mm = jnp.asarray(m[i])[:, None, None]
+                kp = kp.at[pid].set(jnp.where(mm, poison[pid], kp[pid]))
+                vp = vp.at[pid].set(jnp.where(mm, poison[pid], vp[pid]))
+        out2 = ops.paged_attention(q, kp, vp, table, seq_lens,
+                                   window=window, interpret=True)
+        np.testing.assert_allclose(np.asarray(out2), np.asarray(out),
+                                   atol=1e-4, rtol=1e-4)
+
+
 # -------------------------------- SSD ----------------------------------- #
 @pytest.mark.parametrize("B,S,H,P,N,chunk", [
     (1, 64, 2, 16, 8, 16),

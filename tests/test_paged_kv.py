@@ -288,6 +288,206 @@ def test_oversize_prompt_rejected_at_admission():
     assert eng.add_request(2, list(range(1, 20)), expected_total=300)
 
 
+# -------------------------- prefix sharing ------------------------------ #
+def check_shared(kv: PagedKVManager):
+    """Refcount/partition invariants of the shared-prefix pool: every page
+    is exactly one of mapped (refcount == #tables holding it), cached
+    (zero-ref, published) or free; ``used_pages`` counts mapped pages
+    once; cached pages are all published."""
+    held: dict[int, int] = {}
+    for t in kv.tables.values():
+        for p in t:
+            held[p] = held.get(p, 0) + 1
+    for p in range(kv.total_pages):
+        assert kv.refcount[p] == held.get(p, 0), p
+    assert sorted(list(held) + kv.free + list(kv.cached)) \
+        == list(range(kv.total_pages))
+    assert kv.used_pages == len(held)
+    for p in kv.cached:
+        assert p in kv.page_key
+    bt = np.asarray(kv.block_tables)
+    for rid, pages in kv.tables.items():
+        if rid not in kv.seq_of:
+            continue
+        want = pages[:kv.max_pages_per_seq]
+        assert bt[kv.seq_of[rid]][:len(want)].tolist() == want, rid
+
+
+def _run_request(eng, rid, prompt, chunks, n_decode, expected_total=48):
+    """Admit + chunked prefill + one decode batch; returns the stream."""
+    assert eng.add_request(rid, prompt, expected_total=expected_total)
+    got = []
+    for n in chunks:
+        b = Batch()
+        b.add(rid, StageKind.PREFILL, n)
+        got += eng.execute(b).get(rid, [])
+    if n_decode:
+        b = Batch()
+        b.add(rid, StageKind.DECODE, n_decode)
+        got += eng.execute(b).get(rid, [])
+    return got
+
+
+def test_prefix_sharing_saves_pages_and_calls_bit_identical():
+    """Acceptance: a 2-request shared-prefix workload allocates fewer
+    pages and fewer prefill device calls than the unshared run, while
+    greedy output streams stay bit-identical with sharing on vs. off."""
+    rng = np.random.default_rng(11)
+    cfg = get_reduced("smollm-135m")
+    prompt = rng.integers(1, cfg.vocab, 24).tolist()
+    runs = {}
+    for share in (False, True):
+        _, _, eng = make_engine(page_size=4, max_len=128, total_pages=64,
+                                share_prefix=share)
+        s1 = _run_request(eng, 1, prompt, (16, 8), 4)
+        check_shared(eng.kv)
+        s2 = _run_request(eng, 2, prompt, (16, 8), 4)
+        check_shared(eng.kv)
+        runs[share] = (s1, s2, dict(eng.counters), eng.kv)
+    s1_off, s2_off, c_off, kv_off = runs[False]
+    s1_on, s2_on, c_on, kv_on = runs[True]
+    # bit-identical greedy streams, sharing on vs. off
+    assert s1_on == s1_off and s2_on == s2_off
+    assert len(s2_on) == 5
+    # request 2 hit the cached prefix: 24-token prompt, 6 published pages,
+    # hit capped at len-1 = 23
+    assert c_off["prefix_hit_tokens"] == 0
+    assert c_on["prefix_hit_tokens"] == 23
+    # fewer prefill device calls (2nd request re-prefills 1 token, not 24)
+    assert c_on["prefill_calls"] < c_off["prefill_calls"]
+    # fewer pages physically allocated
+    assert kv_on.pages_grabbed < kv_off.pages_grabbed
+    assert kv_on.used_pages < kv_off.used_pages
+
+
+def test_cow_divergence_bit_exact():
+    """Writes into shared pages must copy-on-write: an identical prompt
+    (hit capped at len-1 → last shared page overwritten) and a divergent
+    continuation both match the unshared baseline token-for-token, and
+    the original owner's stream is unperturbed."""
+    rng = np.random.default_rng(13)
+    cfg = get_reduced("smollm-135m")
+    base = rng.integers(1, cfg.vocab, 32).tolist()
+    divergent = base[:16] + rng.integers(1, cfg.vocab, 16).tolist()
+    streams = {}
+    for share in (False, True):
+        _, _, eng = make_engine(max_len=128, total_pages=64,
+                                share_prefix=share)   # page_size 16
+        s1 = _run_request(eng, 1, base, (32,), 2)
+        s2 = _run_request(eng, 2, base, (32,), 4)       # identical prompt
+        s3 = _run_request(eng, 3, divergent, (32,), 4)  # diverges at page 1
+        # the original owner keeps decoding AFTER the CoW writes
+        b = Batch()
+        b.add(1, StageKind.DECODE, 3)
+        s1 += eng.execute(b).get(1, [])
+        streams[share] = (s1, s2, s3)
+        if share:
+            assert eng.counters["prefix_hit_tokens"] == 31 + 16
+            assert eng.kv.cow_copies >= 1        # identical-prompt overwrite
+            check_shared(eng.kv)
+    assert streams[True] == streams[False]
+
+
+def test_refcount_conservation_across_lifecycle():
+    """allocate / extend / release / preempt keep the refcount partition
+    exact while pages are shared between requests."""
+    cfg = get_reduced("smollm-135m")
+    kv = PagedKVManager(cfg, total_pages=16, page_size=4, max_seqs=4,
+                        max_len=64, share_prefix=True)
+    toks = list(range(100, 116))                     # 16 tokens = 4 pages
+    assert kv.admit(1, 16, tokens=toks)
+    kv.register_prefix(1, toks)
+    check_shared(kv)
+    assert kv.admit(2, 24, tokens=toks)              # shares 4, grabs 2
+    assert kv.length(2) == 15                        # hit capped at len-1
+    check_shared(kv)
+    assert kv.used_pages == 6                        # shared counted once
+    assert kv.extend(2, 32)
+    check_shared(kv)
+    assert kv.preempt(1) == 0                        # still shared by rid 2
+    check_shared(kv)
+    assert kv.used_pages == 8
+    n = kv.release(2)                                # zero-ref: 4 published
+    assert n == 8                                    # pages retire to cache
+    check_shared(kv)
+    assert kv.used_pages == 0
+    assert len(kv.cached) == 4 and len(kv.free) == 12
+    # the published chain is still matchable after full drain
+    assert kv.probe_prefix(toks) == 15
+    kv.release(1)
+    check_shared(kv)
+
+
+def test_preemption_replay_reshares_prefix():
+    """A preempted request's published pages survive preemption in the
+    cached pool; its recompute replay re-shares them (cheap) and still
+    resumes the exact greedy stream."""
+    cfg, params, eng = make_engine(page_size=4, max_len=128, total_pages=32)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(1, cfg.vocab, 20).tolist()
+    ref = DenseReference(cfg, params)
+    first = ref.prefill(prompt)
+    want = [first] + ref.decode(first, 8)
+
+    got = _run_request(eng, 1, prompt, (20,), 4, expected_total=40)
+    hits0 = eng.counters["prefix_hit_tokens"]
+    freed = eng.preempt(1)
+    assert freed > 0
+    assert len(eng.kv.cached) >= 5          # published prompt pages cached
+    check_shared(eng.kv)
+    ctx = eng.reqs[1]
+    assert eng.readmit(1, len(ctx.pending) + 8)
+    # the replay re-shared the published prefix instead of recomputing it
+    assert eng.counters["prefix_hit_tokens"] - hits0 >= 20
+    assert eng.last_prefill_progress.get(1, 0) == 0
+    b = Batch()
+    b.add(1, StageKind.PREFILL, 100)        # residual recompute only
+    assert eng.execute(b).get(1, []) == []
+    assert eng.last_prefill_progress[1] == 0
+    b = Batch()
+    b.add(1, StageKind.DECODE, 4)
+    got += eng.execute(b).get(1, [])
+    assert got == want, (got, want)
+    check_shared(eng.kv)
+
+
+def test_eviction_under_pressure_is_lru():
+    """Zero-refcount published pages are evicted oldest-released-first
+    when the free list runs dry."""
+    cfg = get_reduced("smollm-135m")
+    kv = PagedKVManager(cfg, total_pages=8, page_size=4, max_seqs=4,
+                        max_len=64, share_prefix=True)
+    a = list(range(200, 208))                        # 2 pages
+    b = list(range(300, 308))                        # 2 pages
+    assert kv.admit(1, 8, tokens=a)
+    kv.register_prefix(1, a)
+    kv.release(1)                                    # a's pages cached first
+    assert kv.admit(2, 8, tokens=b)
+    kv.register_prefix(2, b)
+    kv.release(2)                                    # b's pages cached after
+    assert len(kv.cached) == 4 and len(kv.free) == 4
+    assert kv.probe_prefix(a) == 7 and kv.probe_prefix(b) == 7
+    # demand 6 pages: 4 free + 2 evicted from the LRU end (a, not b)
+    assert kv.admit(3, 24, tokens=list(range(400, 424)))
+    check_shared(kv)
+    assert kv.prefix_evictions == 2
+    assert kv.probe_prefix(a) == 0                   # oldest chain evicted
+    assert kv.probe_prefix(b) == 7                   # newest chain survives
+
+
+def test_ssm_models_disable_prefix_sharing():
+    """Skipping a cached prefill chunk would skip its (unpaged) SSM state
+    updates, so sharing must auto-disable on SSM-bearing models."""
+    cfg = get_reduced("mamba2-2.7b")
+    kv = PagedKVManager(cfg, total_pages=8, page_size=4, max_seqs=2,
+                        max_len=64, share_prefix=True)
+    assert not kv.share_prefix
+    toks = list(range(1, 17))
+    assert kv.admit(1, 16, tokens=toks)
+    kv.register_prefix(1, toks)
+    assert kv.probe_prefix(toks) == 0
+
+
 def test_paged_decode_backend_dispatch_parity():
     """Forced Pallas (interpret) and pure-JAX gather backends agree."""
     def run(impl):
@@ -306,3 +506,35 @@ def test_paged_decode_backend_dispatch_parity():
         finally:
             attention.PAGED_DECODE_IMPL = "auto"
     assert run("gather") == run("pallas")
+
+
+def test_paged_decode_sliding_window_backend_parity():
+    """Sliding-window decode through the Pallas kernel (interpret) must
+    emit the same greedy stream as the pure-JAX gather fallback, with a
+    window small enough to actually clip the context."""
+    import dataclasses
+    cfg = dataclasses.replace(get_reduced("qwen3-1.7b-swa"),
+                              sliding_window=8)
+    params = init_params(KEY, cfg)
+
+    def run(impl):
+        attention.PAGED_DECODE_IMPL = impl
+        try:
+            eng = ServingEngine(cfg, params,
+                                EngineConfig(max_slots=4, max_len=64,
+                                             total_pages=32, page_size=4))
+            prompt = list(range(5, 19))           # 14 > window 8
+            assert eng.add_request(1, prompt, expected_total=24)
+            b = Batch()
+            b.add(1, StageKind.PREFILL, len(prompt))
+            got = eng.execute(b).get(1, [])
+            b = Batch()
+            b.add(1, StageKind.DECODE, 4)
+            got += eng.execute(b).get(1, [])
+            return got
+        finally:
+            attention.PAGED_DECODE_IMPL = "auto"
+
+    streams = {impl: run(impl) for impl in ("gather", "pallas")}
+    assert streams["gather"] == streams["pallas"]
+    assert len(streams["gather"]) == 5
