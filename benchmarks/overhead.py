@@ -56,6 +56,52 @@ def run_engine_device_calls(n_decode_tokens: int = 16):
          f"tokens_per_device_call={n_tokens / eng.counters['decode_calls']:.0f}")
 
 
+def run_prefill_fusion(prompt_len: int = 32, chunk: int = 16):
+    """Prefill-path op audit for the fused Pallas chunked-prefill kernel:
+    per traced prefill chunk the gather reference issues three paged-KV
+    ops per attention layer (two ``paged_write`` scatters + one
+    gathered-slab attention); the fused kernel issues ONE (in-kernel page
+    writes + attention over paged history in the same pass).  Counted
+    from ``attention.OP_STATS`` deltas on fresh engines, so the numbers
+    reflect the traced device program, not cached recompilations."""
+    import jax
+
+    import repro.models.attention as attention
+    from repro.configs import get_reduced
+    from repro.core.batch import Batch
+    from repro.core.slo import StageKind
+    from repro.models import init_params
+    from repro.serving.engine import EngineConfig, ServingEngine
+
+    cfg = get_reduced("smollm-135m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, prompt_len).tolist()
+    ops = {}
+    for impl in ("gather", "fused"):
+        attention.PAGED_PREFILL_IMPL = impl
+        try:
+            eng = ServingEngine(cfg, params,
+                                EngineConfig(max_slots=4, max_len=128,
+                                             total_pages=64))
+            eng.add_request(1, prompt, expected_total=prompt_len + 8)
+            for _ in range(prompt_len // chunk):
+                b = Batch()
+                b.add(1, StageKind.PREFILL, chunk)
+                eng.execute(b)
+            c = eng.counters
+            ops[impl] = (c["prefill_scatter_ops"] + c["prefill_attn_ops"]
+                         + c["prefill_fused_ops"])
+        finally:
+            attention.PAGED_PREFILL_IMPL = "auto"
+    reduction = ops["gather"] / max(ops["fused"], 1)
+    emit("prefill_fused_op_reduction", reduction,
+         f"gather_ops={ops['gather']};fused_ops={ops['fused']};"
+         f"chunks={prompt_len // chunk};target>=2x")
+    assert reduction >= 2.0, ops
+
+
 if __name__ == "__main__":
     run()
     run_engine_device_calls()
+    run_prefill_fusion()

@@ -1,0 +1,55 @@
+#!/usr/bin/env python
+"""Docs link checker (CI docs job; also run as tests/test_docs.py).
+
+Scans the repo's markdown docs for inline links and verifies every
+internal (non-URL) target resolves to a real file or directory, relative
+to the linking document.  Exits non-zero listing the broken links.
+
+  python scripts/check_docs_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+DOC_GLOBS = ("README.md", "docs/*.md", "ROADMAP.md", "CHANGES.md")
+LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def doc_files(root: Path) -> list[Path]:
+    out: list[Path] = []
+    for pattern in DOC_GLOBS:
+        out.extend(sorted(root.glob(pattern)))
+    return out
+
+
+def broken_links(root: Path) -> list[tuple[Path, str]]:
+    bad = []
+    for doc in doc_files(root):
+        for target in LINK_RE.findall(doc.read_text()):
+            if target.startswith(EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not (doc.parent / path).exists():
+                bad.append((doc.relative_to(root), target))
+    return bad
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(__file__).parents[1]
+    docs = doc_files(root)
+    if not docs:
+        print(f"no markdown docs found under {root}", file=sys.stderr)
+        return 1
+    bad = broken_links(root)
+    for doc, target in bad:
+        print(f"BROKEN {doc}: ({target})", file=sys.stderr)
+    print(f"checked {len(docs)} docs: "
+          f"{'FAIL' if bad else 'ok'} ({len(bad)} broken)")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

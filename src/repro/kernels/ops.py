@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_bh
 from repro.kernels.paged_attention import paged_decode_attention
+from repro.kernels.paged_prefill import paged_prefill_attention
 from repro.kernels.ssd_scan import ssd_scan
 
 
@@ -71,6 +72,25 @@ def paged_attention(q, k_pages, v_pages, block_table, seq_lens, *,
                                   seq_lens.astype(jnp.int32),
                                   scale=scale, window=window,
                                   interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("scale", "window", "interpret"))
+def paged_prefill(q, k_new, v_new, k_pages, v_pages, block_table, pos0,
+                  chunk_len, *, scale: float = None, window: int = None,
+                  interpret: bool = None):
+    """Fused chunked-prefill attention: writes the chunk's K/V into pool
+    pages in-kernel and attends over each lane's paged history in the
+    same pass.  q: (B,S,H,hd); k_new/v_new: (B,S,KVH,hd); k/v_pages:
+    (n_pages,page,KVH,hd); block_table: (B,max_pages); pos0/chunk_len:
+    (B,).  Returns (out, k_pages', v_pages'); the pool buffers update in
+    place via the kernel's input→output aliasing."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return paged_prefill_attention(q, k_new, v_new, k_pages, v_pages,
+                                   block_table.astype(jnp.int32),
+                                   pos0.astype(jnp.int32),
+                                   chunk_len.astype(jnp.int32),
+                                   scale=scale, window=window,
+                                   interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

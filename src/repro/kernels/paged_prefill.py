@@ -1,0 +1,175 @@
+"""Fused chunked-prefill paged-attention Pallas TPU kernel.
+
+One kernel invocation per prefill group does, per lane, what the unfused
+path spread over three device ops per layer (two ``paged_write`` scatters
+plus a dense attention over the gathered slab):
+
+  1. **In-kernel KV page writes** — the chunk's fresh K/V rows are written
+     straight into the lane's pool pages (read-modify-write of each
+     touched page, so partially-filled boundary pages keep their existing
+     tokens).  The page pools are passed with ``memory_space=ANY`` and
+     aliased input→output (``input_output_aliases``), so untouched pages
+     flow through and the update is in place — no pool-sized copy.
+  2. **Chunked causal attention over paged history** — a flash-style
+     online-softmax loop over the lane's block table covers both the
+     request's existing KV history *and* the chunk itself (the pages were
+     just written in step 1, and Pallas guarantees program order within a
+     lane), with causal + sliding-window masking per query position.
+
+Masking contract (the CoW-safe write mask): token i of lane b lands at
+global position ``pos0[b] + i``; positions at or past ``chunk_len[b]``
+are never written, so padded chunk tails and inactive (padded) lanes —
+which alias another lane's block table — touch nothing.  The engine runs
+``PagedKVManager.ensure_writable`` over exactly ``[pos0, pos0+chunk_len)``
+before the call, so every page the kernel writes is exclusively owned and
+unpublished (bit-identical sharing is preserved; see
+docs/ARCHITECTURE.md).
+
+Grid is (batch,); block tables / pos0 / chunk_len arrive via scalar
+prefetch (``pltpu.PrefetchScalarGridSpec``).  GQA is handled like the
+decode kernel: q heads grouped over KV heads, with the query-position
+axis folded into the group axis so the per-page einsum keeps the decode
+kernel's proven (kv-head, rows, page) structure.  Sliding windows skip
+pages entirely below ``pos0 - window + 1`` (no query in the chunk can see
+them).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _prefill_kernel(table_ref, pos0_ref, clen_ref, q_ref, kn_ref, vn_ref,
+                    kp_in_ref, vp_in_ref, o_ref, kp_ref, vp_ref, *,
+                    scale: float, max_pages: int, page: int, n_kvh: int,
+                    group: int, hd: int, S: int, window: Optional[int]):
+    b = pl.program_id(0)
+    pos0 = pos0_ref[b]
+    n_tok = clen_ref[b]
+
+    # ---- phase 1: write the chunk's K/V rows into the lane's pages ----
+    # Touched pages: floor(pos0/page) .. floor((pos0+n_tok-1)/page); a
+    # masked lane (n_tok == 0) runs zero iterations and writes nothing.
+    kn = kn_ref[0]                                       # (S, KVH, hd)
+    vn = vn_ref[0]
+    w_lo = pos0 // page
+    w_hi = jnp.where(n_tok > 0, (pos0 + n_tok - 1) // page + 1, w_lo)
+
+    def write_body(j, carry):
+        pid = table_ref[b, j]
+        rows = j * page + jax.lax.iota(jnp.int32, page)  # global positions
+        valid = (rows >= pos0) & (rows < pos0 + n_tok)
+        src = jnp.clip(rows - pos0, 0, S - 1)
+        old_k = kp_ref[pl.dslice(pid, 1)][0]             # (page, KVH, hd)
+        old_v = vp_ref[pl.dslice(pid, 1)][0]
+        new_k = jnp.take(kn, src, axis=0).astype(old_k.dtype)
+        new_v = jnp.take(vn, src, axis=0).astype(old_v.dtype)
+        m = valid[:, None, None]
+        kp_ref[pl.dslice(pid, 1)] = jnp.where(m, new_k, old_k)[None]
+        vp_ref[pl.dslice(pid, 1)] = jnp.where(m, new_v, old_v)[None]
+        return carry
+
+    jax.lax.fori_loop(w_lo, w_hi, write_body, 0)
+
+    # ---- phase 2: flash attention over the lane's paged KV ----
+    # q rows are folded (S, KVH, G, hd) -> (KVH, S*G, hd): row r holds
+    # query position r // G, so the per-page einsum matches the decode
+    # kernel's (kv-head, rows, page) shape.
+    q = q_ref[0].astype(jnp.float32)                     # (S, H, hd)
+    q = q.reshape(S, n_kvh, group, hd).transpose(1, 0, 2, 3)
+    q = q.reshape(n_kvh, S * group, hd)
+    kv_len = pos0 + n_tok
+    q_pos = pos0 + jax.lax.broadcasted_iota(
+        jnp.int32, (n_kvh, S * group, page), 1) // group
+
+    def attn_body(i, carry):
+        m, l, acc = carry
+        k = kp_ref[pl.dslice(table_ref[b, i], 1)][0].astype(jnp.float32)
+        v = vp_ref[pl.dslice(table_ref[b, i], 1)][0].astype(jnp.float32)
+        s = jnp.einsum("knd,pkd->knp", q, k) * scale     # (KVH, S*G, page)
+        k_pos = i * page + jax.lax.broadcasted_iota(
+            jnp.int32, (n_kvh, S * group, page), 2)
+        valid = (k_pos < kv_len) & (k_pos <= q_pos)
+        if window is not None:
+            valid &= k_pos > q_pos - window
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum("knp,pkd->knd", p, v)
+        return m_new, l_new, acc_new
+
+    if window is None:
+        a_lo = jnp.int32(0)
+    else:
+        # no query in the chunk sees positions <= pos0 - window
+        a_lo = jnp.maximum((pos0 - window + 1) // page, 0)
+    a_hi = jnp.minimum((kv_len + page - 1) // page, max_pages)
+    m0 = jnp.full((n_kvh, S * group, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((n_kvh, S * group, 1), jnp.float32)
+    a0 = jnp.zeros((n_kvh, S * group, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(a_lo, a_hi, attn_body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)                    # (KVH, S*G, hd)
+    out = out.reshape(n_kvh, S, group, hd).transpose(1, 0, 2, 3)
+    o_ref[0] = out.reshape(S, n_kvh * group, hd).astype(o_ref.dtype)
+
+
+def paged_prefill_attention(q, k_new, v_new, k_pages, v_pages, block_table,
+                            pos0, chunk_len, *, scale: float = None,
+                            window: Optional[int] = None,
+                            interpret: bool = True):
+    """Fused chunked-prefill attention with in-kernel paged KV writes.
+
+    q: (B, S, H, hd); k_new/v_new: (B, S, KVH, hd) — the chunk's fresh
+    projections; k/v_pages: (n_pages, page, KVH, hd); block_table:
+    (B, max_pages) int32; pos0/chunk_len: (B,) int32 (the CoW-safe write
+    mask: rows at or past chunk_len are dropped, lanes with chunk_len 0
+    neither write nor contribute).  Returns (out (B, S, H, hd),
+    k_pages', v_pages') with the chunk's KV landed in the pools.
+    """
+    B, S, H, hd = q.shape
+    n_pages, page, KVH, _ = k_pages.shape
+    max_pages = block_table.shape[1]
+    assert H % KVH == 0
+    group = H // KVH
+    scale = hd ** -0.5 if scale is None else scale
+
+    kernel = functools.partial(
+        _prefill_kernel, scale=scale, max_pages=max_pages, page=page,
+        n_kvh=KVH, group=group, hd=hd, S=S, window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,          # block_table, pos0, chunk_len
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, S, H, hd), lambda b, *_: (b, 0, 0, 0)),
+            pl.BlockSpec((1, S, KVH, hd), lambda b, *_: (b, 0, 0, 0)),
+            pl.BlockSpec((1, S, KVH, hd), lambda b, *_: (b, 0, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),           # k_pages (HBM)
+            pl.BlockSpec(memory_space=pl.ANY),           # v_pages (HBM)
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, H, hd), lambda b, *_: (b, 0, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
+            jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+            jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype),
+        ],
+        # pools update in place: operand indices include the 3 scalar-
+        # prefetch args, so k_pages/v_pages are operands 6/7
+        input_output_aliases={6: 1, 7: 2},
+        interpret=interpret,
+    )(block_table, pos0, chunk_len, q, k_new, v_new, k_pages, v_pages)

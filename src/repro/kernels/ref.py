@@ -57,6 +57,47 @@ def ref_paged_decode(q, k_pages, v_pages, block_table, seq_lens, *,
     return jnp.stack(out).astype(q.dtype)
 
 
+def ref_paged_prefill(q, k_new, v_new, k_pages, v_pages, block_table,
+                      pos0, chunk_len, *, scale=None, window=None):
+    """Unfused oracle for the chunked-prefill paged kernel: scatter the
+    chunk's K/V into the pages, gather each lane's logical stream, run
+    masked attention.
+
+    q: (B, S, H, hd); k_new/v_new: (B, S, KVH, hd);
+    k/v_pages: (n_pages, page, KVH, hd); block_table: (B, max_pages);
+    pos0/chunk_len: (B,) int32.  Returns (out, k_pages', v_pages').
+    """
+    B, S, H, hd = q.shape
+    n_pages, page, KVH, _ = k_pages.shape
+    max_pages = block_table.shape[1]
+    G = H // KVH
+    scale = hd ** -0.5 if scale is None else scale
+    kp, vp = k_pages, v_pages
+    for b in range(B):
+        for i in range(int(chunk_len[b])):
+            p = int(pos0[b]) + i
+            pid = int(block_table[b, p // page])
+            kp = kp.at[pid, p % page].set(k_new[b, i].astype(kp.dtype))
+            vp = vp.at[pid, p % page].set(v_new[b, i].astype(vp.dtype))
+    out = []
+    for b in range(B):
+        ks = kp[block_table[b]].reshape(max_pages * page, KVH, hd)
+        vs = vp[block_table[b]].reshape(max_pages * page, KVH, hd)
+        ks = jnp.repeat(ks, G, axis=1)
+        vs = jnp.repeat(vs, G, axis=1)
+        s = jnp.einsum("qhd,shd->hqs", q[b].astype(jnp.float32),
+                       ks.astype(jnp.float32)) * scale
+        q_pos = int(pos0[b]) + jnp.arange(S)[:, None]
+        k_pos = jnp.arange(max_pages * page)[None, :]
+        mask = (k_pos < int(pos0[b]) + int(chunk_len[b])) & (k_pos <= q_pos)
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask[None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out.append(jnp.einsum("hqs,shd->qhd", p, vs.astype(jnp.float32)))
+    return jnp.stack(out).astype(q.dtype), kp, vp
+
+
 def ref_ssd(xh, dt, A, Bm, Cm, init_state=None):
     """Sequential (token-by-token) SSD recurrence — the slowest, most
     obviously-correct oracle.

@@ -12,9 +12,13 @@ KV caches come in two layouts sharing one code path:
     lengths (training-time eval, naive references),
   * paged: global page pools (n_pages, page, n_kv, hd) owned by
     serving/kvcache.py's PagedKVManager, addressed through per-sequence
-    block tables.  Chunked prefill scatters new KV straight into pages;
-    decode attention dispatches to the Pallas paged kernel on TPU and to
-    a pure-JAX block-table gather (kernels/ref.py semantics) elsewhere.
+    block tables.  Chunked prefill dispatches per backend: the fused
+    Pallas kernel (kernels/paged_prefill.py) writes the chunk's KV into
+    pool pages in-kernel and attends over the paged history in one pass
+    on TPU, while the gather reference (paged_write scatter + dense
+    attention over the gathered slab) serves CPU/GPU and parity tests.
+    Decode attention likewise dispatches to the Pallas paged-decode
+    kernel on TPU and a pure-JAX block-table gather elsewhere.
 """
 from __future__ import annotations
 
@@ -32,6 +36,27 @@ NEG_INF = -1e30
 # pure-JAX gather everywhere else; tests may force "pallas" / "gather".
 PAGED_DECODE_IMPL = "auto"
 
+# Paged chunked-prefill backend: "fused" runs the Pallas kernel that
+# writes the chunk's KV into pool pages in-kernel and attends over the
+# paged history in the same pass (kernels/paged_prefill.py); "gather" is
+# the unfused block-table reference (paged_write scatter + dense
+# attention over the gathered slab).  "auto" = fused on TPU, gather
+# elsewhere; tests force "fused" (interpret=True on CPU) for parity.
+PAGED_PREFILL_IMPL = "auto"
+
+# Trace-time op audit: how many paged-KV device ops each traced program
+# contains (page scatters, slab attentions, fused prefill kernels).  The
+# engine snapshots deltas around its jitted calls — compilation happens
+# once per shape, so fresh traces reveal the per-chunk op count that the
+# fused kernel removes (benchmarks/overhead.py).
+OP_STATS = {"paged_write": 0, "prefill_attn": 0, "fused_prefill": 0}
+
+
+def _paged_prefill_impl() -> str:
+    if PAGED_PREFILL_IMPL == "auto":
+        return "fused" if jax.default_backend() == "tpu" else "gather"
+    return PAGED_PREFILL_IMPL
+
 
 # ----------------------------- paged KV --------------------------------- #
 def paged_write(pages, vals, block_table, pos0, chunk_len):
@@ -43,6 +68,7 @@ def paged_write(pages, vals, block_table, pos0, chunk_len):
     chunk_len[b] (padding / inactive lanes) are dropped, so one call can
     serve bucketed prefill chunks and masked decode lanes alike.
     """
+    OP_STATS["paged_write"] += 1
     P, page = pages.shape[:2]
     B, S = vals.shape[:2]
     tail = pages.shape[2:]
@@ -243,6 +269,19 @@ def attn_forward(p, x, cfg: ModelConfig, *, positions, cache=None,
     if "k_pages" in cache:
         if chunk_len is None:
             chunk_len = jnp.full((B,), Sq, jnp.int32)
+        if Sq > 1 and _paged_prefill_impl() == "fused":
+            # fused chunked prefill: the kernel scatters the chunk's KV
+            # into pool pages in-kernel AND attends over the paged
+            # history in the same pass — one device op where the gather
+            # reference below issues three (2 scatters + attention).
+            # The engine's CoW barrier ran over [pos0, pos0+chunk_len)
+            # before this call, so every written page is exclusive.
+            from repro.kernels import ops
+            OP_STATS["fused_prefill"] += 1
+            out, kp, vp = ops.paged_prefill(
+                q, k, v, cache["k_pages"], cache["v_pages"], block_tables,
+                pos0, chunk_len, window=window)
+            return out.astype(q.dtype), {"k_pages": kp, "v_pages": vp}
         kp = paged_write(cache["k_pages"], k, block_tables, pos0, chunk_len)
         vp = paged_write(cache["v_pages"], v, block_tables, pos0, chunk_len)
         new_cache = {"k_pages": kp, "v_pages": vp}
@@ -250,6 +289,7 @@ def attn_forward(p, x, cfg: ModelConfig, *, positions, cache=None,
         if Sq == 1:
             return paged_decode_attention(q, kp, vp, block_tables, kv_len,
                                           window=window), new_cache
+        OP_STATS["prefill_attn"] += 1
         ck = paged_gather(kp, block_tables).astype(q.dtype)
         cv = paged_gather(vp, block_tables).astype(q.dtype)
         mask = causal_mask(B, Sq, ck.shape[1], pos0, kv_len, window)

@@ -61,6 +61,13 @@ class EngineConfig:
     # Auto-disabled for SSM-bearing models and per-request when encoder
     # conditioning makes prompt KV depend on more than the token stream.
     share_prefix: bool = True
+    # Prefix-aware admission: shave the driver's up-front expected_total
+    # reservation by the probed cached-prefix hit, so requests whose
+    # prompt is mostly resident admit under page pressure that a
+    # full-demand reservation would decline.  Decode growth past the
+    # shaved reservation extends on demand (with the usual best-effort
+    # preemption pressure valve) — more admissions, some thrash risk.
+    prefix_aware_admission: bool = False
 
 
 @dataclasses.dataclass
@@ -110,7 +117,13 @@ class ServingEngine:
         self.counters = {"prefill_calls": 0, "decode_calls": 0,
                          "decode_tokens": 0, "spec_draft_calls": 0,
                          "spec_verify_calls": 0, "preemptions": 0,
-                         "prefix_hit_tokens": 0}
+                         "prefix_hit_tokens": 0,
+                         # paged-KV ops inside freshly TRACED prefill
+                         # programs (attention.OP_STATS deltas; cached
+                         # compilations add 0): the fused kernel turns
+                         # 2 scatters + 1 attention per layer into one op
+                         "prefill_scatter_ops": 0, "prefill_attn_ops": 0,
+                         "prefill_fused_ops": 0}
         # fresh request-level progress granted by the last admission's
         # prefix hit (hit tokens beyond preemption replay) — the driver
         # advances the request by this right after add/restore/readmit
@@ -397,8 +410,11 @@ class ServingEngine:
             self._reserve(rid, pos + L, on_pressure)
             # CoW before pending is consumed: a failed copy leaves every
             # prompt retryable, and the chunk below writes into pages this
-            # request owns exclusively
+            # request owns exclusively — check_writable re-asserts the
+            # contract the fused prefill kernel relies on (its in-kernel
+            # page writes must never touch a shared or published page)
             self._cow_barrier(rid, pos, L, on_pressure)
+            self.kv.check_writable(rid, pos, L)
             recs.append((rid, ctx.pending[:L], pos))
         for rid, chunk, _ in recs:
             self.reqs[rid].pending = self.reqs[rid].pending[len(chunk):]
@@ -442,10 +458,18 @@ class ServingEngine:
                 keys.append(sk)
         keys += [jax.random.PRNGKey(0)] * pad
         cache = self.kv.lane_cache(slots_p)
+        from repro.models import attention as _attn
+        ops0 = dict(_attn.OP_STATS)
         tok, cache = self._prefill(
             self.params, jnp.asarray(toks), cache, jnp.asarray(pos0),
             jnp.asarray(true_len), self.kv.table_rows(slots_p),
             self._gather_enc(rids, B), jnp.stack(keys))
+        self.counters["prefill_scatter_ops"] += (
+            _attn.OP_STATS["paged_write"] - ops0["paged_write"])
+        self.counters["prefill_attn_ops"] += (
+            _attn.OP_STATS["prefill_attn"] - ops0["prefill_attn"])
+        self.counters["prefill_fused_ops"] += (
+            _attn.OP_STATS["fused_prefill"] - ops0["fused_prefill"])
         self.kv.absorb(slots, cache)
         self.counters["prefill_calls"] += 1
         tok_h = np.asarray(tok)

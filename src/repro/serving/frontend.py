@@ -234,6 +234,12 @@ class ReplicaDriver:
             return False
         expected = r.total_tokens() + 8
         enc = self.encs.get(r.rid)
+        if eng.ecfg.prefix_aware_admission and enc is None:
+            # shave the up-front reservation by the probed cached-prefix
+            # hit: those tokens' pages are mapped (not drawn fresh) at
+            # admit, so the table only has to cover the residual now —
+            # decode growth extends on demand (EngineConfig docstring)
+            expected = max(expected - eng.kv.probe_prefix(prompt), 1)
         ok = eng.add_request(r.rid, prompt, expected, enc_states=enc)
         if not ok:
             # fresh demand is the full reservation minus LIVE shared-prefix

@@ -33,8 +33,11 @@ request, §2.1 scenarios):
   pages are never published: speculative rollback may rewrite them).
   Published pages are immutable; positions and tokens fully determine
   their content, so any request whose leading tokens match the chain may
-  map them.  (Chain keys are 64-bit hash chains; adversarial collisions
-  are out of scope at repro scale.)
+  map them.  Chain keys are 64-bit hash chains, but matches are never
+  trusted on the hash alone: each published page stores its exact chunk
+  tokens (``page_tokens``) and ``admit``/``resume``/``probe_prefix``
+  verify them per page, so a hash collision degrades to a cache miss
+  instead of serving another prompt's KV.
 * ``admit``/``resume`` match the longest published chain (capped at
   ``len(tokens) - 1`` so at least one token remains to prefill — the
   completion sample needs a real forward) and map those pages into the
@@ -209,6 +212,7 @@ class PagedKVManager(PageAllocator):
         self.refcount = np.zeros((total_pages,), np.int32)
         self.prefix_index: dict[int, int] = {}       # chain hash -> page
         self.page_key: dict[int, int] = {}           # page -> chain hash
+        self.page_tokens: dict[int, tuple] = {}      # page -> exact chunk
         self.cached: OrderedDict[int, int] = OrderedDict()  # LRU, zero-ref
         # per-rid registration cursor: (full pages processed, chain hash
         # there) so repeated register_prefix calls hash incrementally
@@ -250,6 +254,7 @@ class PagedKVManager(PageAllocator):
                 p, key = self.cached.popitem(last=False)   # LRU victim
                 del self.prefix_index[key]
                 del self.page_key[p]
+                self.page_tokens.pop(p, None)
                 self.prefix_evictions += 1
             self.refcount[p] = 1
             out.append(p)
@@ -459,9 +464,13 @@ class PagedKVManager(PageAllocator):
         ps = self.page_size
         h, pages = None, []
         for i in range(len(tokens) // ps):
-            h = self._chain(h, tokens[i * ps:(i + 1) * ps])
+            chunk = tuple(int(t) for t in tokens[i * ps:(i + 1) * ps])
+            h = self._chain(h, chunk)
             p = self.prefix_index.get(h)
-            if p is None:
+            # hash match alone is not proof: verify the page's exact
+            # tokens so a 64-bit chain collision can never map another
+            # prompt's KV (it degrades to a miss instead)
+            if p is None or self.page_tokens.get(p) != chunk:
                 break
             pages.append(p)
         hit = min(len(pages) * ps, len(tokens) - 1)
@@ -506,12 +515,14 @@ class PagedKVManager(PageAllocator):
         done, h = self._reg_state.get(rid, (0, None))
         n_full = min(len(tokens) // ps, len(pages))
         for i in range(done, n_full):
-            h = self._chain(h, tokens[i * ps:(i + 1) * ps])
+            chunk = tuple(int(t) for t in tokens[i * ps:(i + 1) * ps])
+            h = self._chain(h, chunk)
             p = pages[i]
             if h in self.prefix_index or p in self.page_key:
                 continue
             self.prefix_index[h] = p
             self.page_key[p] = h
+            self.page_tokens[p] = chunk
         if n_full > done:
             self._reg_state[rid] = (n_full, h)
 
@@ -542,6 +553,7 @@ class PagedKVManager(PageAllocator):
             p = pages[i]
             if self.refcount[p] <= 1 and p in self.page_key:
                 del self.prefix_index[self.page_key.pop(p)]
+                self.page_tokens.pop(p, None)
         src, dst = [], []
         for i, q in zip(idx, fresh):
             p = pages[i]
@@ -561,6 +573,28 @@ class PagedKVManager(PageAllocator):
                     s, jnp.asarray(cols, jnp.int32)].set(
                     jnp.asarray(vals, jnp.int32))
         self.cow_copies += len(src)
+
+    def check_writable(self, rid: int, start_tok: int,
+                       n_tokens: int) -> list[int]:
+        """The write-set handoff to the fused prefill kernel: returns the
+        pages covering cache positions ``[start_tok, start_tok+n_tokens)``
+        after asserting every one passed the ``ensure_writable`` barrier
+        (exclusively owned, unpublished).  The kernel writes these pages
+        in-kernel with no further checks, so a violation here would break
+        the bit-identical sharing guarantee — fail loudly instead."""
+        pages = self.tables.get(rid, [])
+        ps = self.page_size
+        first = start_tok // ps
+        last = min((start_tok + n_tokens - 1) // ps, len(pages) - 1)
+        out = [pages[i] for i in range(first, last + 1)] if n_tokens > 0 \
+            else []
+        if self.share_prefix:
+            for p in out:
+                assert self.refcount[p] == 1, \
+                    f"page {p} of rid {rid} still shared at write time"
+                assert p not in self.page_key, \
+                    f"page {p} of rid {rid} still published at write time"
+        return out
 
     def _copy_pages(self, src: list[int], dst: list[int]) -> None:
         """Device copy src pages onto dst pages in every paged pool leaf

@@ -55,3 +55,45 @@ def test_frontend_multi_stage_tool_loop():
     assert req.finished
     assert len(req.stage_complete_times) == 4
     assert stats.tokens_out == 8            # both decode stages streamed
+
+
+def test_prefix_aware_admission_flip():
+    """Satellite acceptance: under page pressure a request whose prompt is
+    mostly cache-resident is declined by the full-demand reservation but
+    admitted when ``prefix_aware_admission`` shaves the reservation by the
+    probed hit."""
+    import numpy as np
+
+    from repro.core.batch import Batch
+    from repro.core.slo import StageKind
+    from repro.serving.frontend import ReplicaDriver
+
+    cfg = get_reduced("smollm-135m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(1, cfg.vocab, 16).tolist()
+
+    def admit_second(prefix_aware):
+        eng = ServingEngine(cfg, params, EngineConfig(
+            max_slots=8, max_len=64, page_size=4, total_pages=10,
+            share_prefix=True, prefix_aware_admission=prefix_aware))
+        drv = ReplicaDriver(eng, SLOsServeScheduler(
+            VIRT, SchedulerConfig(page_size=4)))
+        # resident request: 5 reserved pages, 4 published prompt pages
+        assert eng.add_request(1, prompt, expected_total=20)
+        b = Batch()
+        b.add(1, StageKind.PREFILL, 16)
+        eng.execute(b)
+        # arrival with the same prompt: full demand 40 tokens = 10 pages
+        # (6 fresh after the live 4-page hit) vs. 5 free pages; the shaved
+        # reservation (40 - 15 hit tokens -> 7 pages, 3 fresh) fits
+        r = simple_request(2, 0.0, prompt=16, output=16,
+                           ttft_slowdown=5.0, tpot=0.1)
+        drv.prompts[r.rid] = prompt
+        ok = drv._admit(r, 0.0)
+        if ok:
+            assert eng.kv.length(2) == 15      # hit mapped, not re-prefilled
+        return ok
+
+    assert not admit_second(False)
+    assert admit_second(True)

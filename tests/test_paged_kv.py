@@ -475,6 +475,47 @@ def test_eviction_under_pressure_is_lru():
     assert kv.probe_prefix(b) == 7                   # newest chain survives
 
 
+def test_prefix_match_verifies_tokens_on_hash_collision(monkeypatch):
+    """Chain matches are verified against the page's stored tokens, so a
+    64-bit hash collision degrades to a cache miss — it can never map
+    another prompt's KV.  Forcing the chain hash constant makes EVERY
+    chunk collide; only a true token match may still share."""
+    cfg = get_reduced("smollm-135m")
+    kv = PagedKVManager(cfg, total_pages=16, page_size=4, max_seqs=4,
+                        max_len=64, share_prefix=True)
+    monkeypatch.setattr(PagedKVManager, "_chain",
+                        staticmethod(lambda parent, chunk: 42))
+    a = list(range(100, 108))                # 2 pages
+    b = list(range(200, 208))                # same forced hash, other tokens
+    assert kv.admit(1, 8, tokens=a)
+    kv.register_prefix(1, a)
+    # page 2 of a's chain collides with page 1's hash and is deduped away;
+    # the verified match therefore stops after the first page
+    assert kv.probe_prefix(a) == 4
+    assert kv.probe_prefix(b) == 0           # collision rejected outright
+    assert kv.admit(2, 8, tokens=b)          # admits, but maps nothing
+    assert kv.length(2) == 0
+    check_shared(kv)
+
+
+def test_unpublish_and_eviction_clear_page_tokens():
+    """The verification tokens follow the publication lifecycle: CoW
+    unpublish and LRU eviction both clear ``page_tokens``."""
+    cfg = get_reduced("smollm-135m")
+    kv = PagedKVManager(cfg, total_pages=4, page_size=4, max_seqs=4,
+                        max_len=64, share_prefix=True)
+    toks = list(range(50, 58))
+    assert kv.admit(1, 8, tokens=toks)
+    kv.register_prefix(1, toks)
+    assert len(kv.page_tokens) == 2
+    kv.ensure_writable(1, 0, 4)              # sole owner: unpublish page 0
+    assert len(kv.page_tokens) == 1
+    kv.release(1)                            # page 1 retires to LRU cache
+    assert kv.admit(2, 16, tokens=None)      # forces eviction of the cache
+    assert not kv.page_tokens
+    check_shared(kv)
+
+
 def test_ssm_models_disable_prefix_sharing():
     """Skipping a cached prefill chunk would skip its (unpaged) SSM state
     updates, so sharing must auto-disable on SSM-bearing models."""

@@ -1,0 +1,233 @@
+"""Fused chunked-prefill paged-attention kernel (kernels/paged_prefill.py).
+
+Kernel level: interpret=True parity against the unfused scatter+gather
+oracle (causal, sliding window, page-boundary chunk starts, masked
+lanes), in-kernel write discipline (masked lanes touch nothing), and the
+poisoned-page leak check mirroring the decode kernel's.  Engine level:
+greedy token streams must be bit-identical with the fused backend on vs.
+off — with prefix sharing on and off — and the traced prefill program
+must contain >= 2x fewer paged-KV ops per chunk (2 scatters + 1 slab
+attention fused into one kernel)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.attention as attention
+from repro.configs import get_reduced
+from repro.core.batch import Batch
+from repro.core.slo import StageKind
+from repro.kernels import ops
+from repro.kernels.ref import ref_paged_prefill
+from repro.models import init_params
+from repro.serving.engine import EngineConfig, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(B, S, H, KV, hd, page, max_pages, seed=0):
+    rng = np.random.default_rng(seed)
+    n_pages = B * max_pages + 3
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    kn = jax.random.normal(ks[1], (B, S, KV, hd))
+    vn = jax.random.normal(ks[2], (B, S, KV, hd))
+    kp = jax.random.normal(ks[3], (n_pages, page, KV, hd))
+    vp = jax.random.normal(ks[4], (n_pages, page, KV, hd))
+    perm = rng.permutation(n_pages)[:B * max_pages]
+    table = jnp.asarray(perm.reshape(B, max_pages), jnp.int32)
+    return q, kn, vn, kp, vp, table
+
+
+# ----------------------------- kernel parity ---------------------------- #
+@pytest.mark.parametrize("B,S,H,KV,hd,page,max_pages,window", [
+    (2, 8, 4, 2, 32, 4, 8, None),     # GQA, chunks straddle page edges
+    (3, 16, 4, 4, 16, 16, 4, None),   # page-aligned chunks
+    (2, 8, 2, 1, 64, 4, 8, 5),        # MQA + window clipping history
+    (2, 12, 4, 2, 32, 8, 6, 3),       # window smaller than the chunk
+])
+def test_fused_prefill_matches_oracle(B, S, H, KV, hd, page, max_pages,
+                                      window):
+    """Output AND updated pools must match the scatter+gather oracle; the
+    lanes mix page-aligned and mid-page chunk starts plus a masked
+    (chunk_len 0) lane and a partial (padded-tail) lane."""
+    q, kn, vn, kp, vp, table = _setup(B, S, H, KV, hd, page, max_pages)
+    pos0 = jnp.asarray([3, page, 0][:B], jnp.int32)   # mid-page + aligned
+    clen = jnp.asarray([S, S // 2, 0][:B], jnp.int32)
+    out, kp2, vp2 = ops.paged_prefill(q, kn, vn, kp, vp, table, pos0, clen,
+                                      window=window, interpret=True)
+    wout, wkp, wvp = ref_paged_prefill(
+        q, kn, vn, kp, vp, np.asarray(table), np.asarray(pos0),
+        np.asarray(clen), window=window)
+    # pools: every written row landed, every untouched row survived
+    np.testing.assert_allclose(np.asarray(kp2), np.asarray(wkp), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(vp2), np.asarray(wvp), atol=1e-6)
+    # outputs at real (unpadded) query positions
+    for b in range(B):
+        n = int(clen[b])
+        if n:
+            np.testing.assert_allclose(
+                np.asarray(out[b, :n]), np.asarray(wout[b, :n]),
+                atol=2e-5, rtol=2e-5)
+
+
+def test_fused_prefill_attends_paged_history():
+    """A second chunk must see the first chunk's KV through the pages:
+    running (chunk1, chunk2) through the kernel equals running the
+    concatenated chunk in one call, at chunk2's positions."""
+    B, S, H, KV, hd, page, max_pages = 1, 8, 4, 2, 32, 4, 8
+    q, kn, vn, kp, vp, table = _setup(B, 2 * S, H, KV, hd, page, max_pages)
+    z = jnp.zeros((B,), jnp.int32)
+    full = jnp.full((B,), 2 * S, jnp.int32)
+    want, _, _ = ops.paged_prefill(q, kn, vn, kp, vp, table, z, full,
+                                   interpret=True)
+    half = jnp.full((B,), S, jnp.int32)
+    _, kp1, vp1 = ops.paged_prefill(
+        q[:, :S], kn[:, :S], vn[:, :S], kp, vp, table, z, half,
+        interpret=True)
+    got2, _, _ = ops.paged_prefill(
+        q[:, S:], kn[:, S:], vn[:, S:], kp1, vp1, table,
+        jnp.full((B,), S, jnp.int32), half, interpret=True)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(want[:, S:]),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_masked_lane_writes_nothing():
+    """A padded lane (chunk_len 0) aliases another lane's block table —
+    its in-kernel writes must be fully suppressed (the engine pads prefill
+    groups exactly this way)."""
+    B, S, H, KV, hd, page, max_pages = 2, 8, 4, 2, 32, 4, 4
+    q, kn, vn, kp, vp, table = _setup(B, S, H, KV, hd, page, max_pages)
+    table = table.at[1].set(table[0])          # lane 1 aliases lane 0
+    pos0 = jnp.asarray([0, 0], jnp.int32)
+    clen = jnp.asarray([S, 0], jnp.int32)
+    # poison lane 1's would-be writes so corruption would be visible
+    kn = kn.at[1].set(1e6)
+    vn = vn.at[1].set(1e6)
+    out, kp2, vp2 = ops.paged_prefill(q, kn, vn, kp, vp, table, pos0, clen,
+                                      interpret=True)
+    _, wkp, wvp = ref_paged_prefill(
+        q[:1], kn[:1], vn[:1], kp, vp, np.asarray(table[:1]),
+        np.asarray(pos0[:1]), np.asarray(clen[:1]))
+    np.testing.assert_allclose(np.asarray(kp2), np.asarray(wkp), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(vp2), np.asarray(wvp), atol=1e-6)
+    assert np.isfinite(np.asarray(out[0])).all()
+
+
+@pytest.mark.parametrize("window", [None, 3])
+def test_fused_prefill_poisoned_page_leak_check(window):
+    """Mirrors the decode kernel's leak check: poisoning every KV position
+    the chunk may not see — beyond kv_len, below the sliding window, and
+    wholly unmapped pages — must leave the output unchanged."""
+    B, S, H, KV, hd, page, max_pages = 2, 8, 4, 2, 32, 4, 6
+    q, kn, vn, kp, vp, table = _setup(B, S, H, KV, hd, page, max_pages)
+    pos0 = jnp.asarray([5, 0], jnp.int32)
+    clen = jnp.asarray([S, S], jnp.int32)
+    out, _, _ = ops.paged_prefill(q, kn, vn, kp, vp, table, pos0, clen,
+                                  window=window, interpret=True)
+    pos = np.arange(max_pages * page)
+    kpd, vpd = kp, vp
+    used = set()
+    for b in range(B):
+        kv_len = int(pos0[b]) + S
+        # positions invisible to EVERY query of the chunk
+        bad = pos >= kv_len
+        if window is not None:
+            bad |= pos <= int(pos0[b]) - window   # below the widest window
+        bad = bad.reshape(max_pages, page)
+        for i, pid in enumerate(np.asarray(table[b])):
+            used.add(int(pid))
+            m = jnp.asarray(bad[i])[:, None, None]
+            kpd = kpd.at[pid].set(jnp.where(m, 1e4, kpd[pid]))
+            vpd = vpd.at[pid].set(jnp.where(m, 1e4, vpd[pid]))
+    for pid in range(kp.shape[0]):                # unmapped pages
+        if pid not in used:
+            kpd = kpd.at[pid].set(1e4)
+            vpd = vpd.at[pid].set(1e4)
+    out2, _, _ = ops.paged_prefill(q, kn, vn, kpd, vpd, table, pos0, clen,
+                                   window=window, interpret=True)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(out),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ----------------------------- engine parity ---------------------------- #
+def _stream(cfg, params, impl, share, prompts, chunks, n_decode=4,
+            **ecfg_kw):
+    """Greedy streams for a list of (rid, prompt) under a forced prefill
+    backend; chunked so the second chunk starts mid-page."""
+    attention.PAGED_PREFILL_IMPL = impl
+    try:
+        defaults = dict(max_slots=4, max_len=128, total_pages=64,
+                        share_prefix=share)
+        defaults.update(ecfg_kw)
+        eng = ServingEngine(cfg, params, EngineConfig(**defaults))
+        streams = {}
+        for rid, prompt in prompts:
+            assert eng.add_request(rid, prompt, expected_total=48)
+            got = []
+            for n in chunks:
+                b = Batch()
+                b.add(rid, StageKind.PREFILL, n)
+                got += eng.execute(b).get(rid, [])
+            b = Batch()
+            b.add(rid, StageKind.DECODE, n_decode)
+            got += eng.execute(b).get(rid, [])
+            streams[rid] = got
+        return streams, dict(eng.counters)
+    finally:
+        attention.PAGED_PREFILL_IMPL = "auto"
+
+
+@pytest.mark.parametrize("share", [False, True])
+def test_fused_prefill_stream_bit_identical(share):
+    """Greedy streams with the fused kernel on vs. off must match token
+    for token — uneven chunk splits (page-boundary crossing mid-chunk),
+    with prefix sharing exercising CoW-prepared pages when on."""
+    cfg = get_reduced("smollm-135m")
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(3)
+    base = rng.integers(1, cfg.vocab, 24).tolist()
+    divergent = base[:16] + rng.integers(1, cfg.vocab, 8).tolist()
+    prompts = [(1, base), (2, base), (3, divergent)]
+    runs = {impl: _stream(cfg, params, impl, share, prompts, (10, 14))
+            for impl in ("gather", "fused")}
+    assert runs["fused"][0] == runs["gather"][0]
+    assert all(len(s) == 5 for s in runs["fused"][0].values())
+    if share:   # sharing stayed active under the fused backend
+        assert runs["fused"][1]["prefix_hit_tokens"] \
+            == runs["gather"][1]["prefix_hit_tokens"] > 0
+
+
+def test_fused_prefill_sliding_window_stream():
+    """Sliding-window model: fused prefill (window masking in-kernel)
+    must reproduce the gather reference's stream exactly."""
+    cfg = dataclasses.replace(get_reduced("qwen3-1.7b-swa"),
+                              sliding_window=8)
+    params = init_params(KEY, cfg)
+    prompt = list(range(5, 19))                   # 14 tokens > window 8
+    runs = {impl: _stream(cfg, params, impl, False, [(1, prompt)], (9, 5),
+                          page_size=4, total_pages=32, max_len=64)
+            for impl in ("gather", "fused")}
+    assert runs["fused"][0] == runs["gather"][0]
+    assert len(runs["fused"][0][1]) == 5
+
+
+def test_fused_prefill_halves_traced_kv_ops():
+    """Acceptance: per traced prefill chunk the fused backend issues one
+    paged-KV op per layer where the gather reference issues three (two
+    scatters + one slab attention) — >= 2x fewer device ops."""
+    cfg = get_reduced("smollm-135m")
+    params = init_params(KEY, cfg)
+    prompt = list(range(1, 17))
+    counters = {}
+    for impl in ("gather", "fused"):
+        _, counters[impl] = _stream(cfg, params, impl, False,
+                                    [(1, prompt)], (16,), n_decode=1)
+    g, f = counters["gather"], counters["fused"]
+    assert f["prefill_fused_ops"] > 0
+    assert f["prefill_scatter_ops"] == 0 and f["prefill_attn_ops"] == 0
+    unfused_ops = g["prefill_scatter_ops"] + g["prefill_attn_ops"]
+    assert g["prefill_fused_ops"] == 0
+    assert unfused_ops >= 2 * f["prefill_fused_ops"], (g, f)
