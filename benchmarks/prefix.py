@@ -1,15 +1,25 @@
 """Shared-prompt prefix-cache benchmark: N requests over K distinct
-system prompts, served by a real single-replica frontend with prefix
-sharing ON vs OFF.
+system prompts, served by a real single-replica frontend with sharing
+OFF vs page-granular vs token-level prefix matching.
+
+The system prompts deliberately end MID-PAGE (``sys_len % PAGE != 0``),
+so page-granular matching forfeits the boundary page that token-level
+matching recovers via a CoW'd head copy — the report shows the exact
+hit-token gap between the two granularities.
 
 Reports the audit counters the shared-prefix pool exposes:
-  * prefix_hit_tokens — prompt tokens served from shared pages,
-  * prefill_calls     — jitted prefill device computations,
-  * pages_grabbed     — pages physically allocated over the run
+  * prefix_hit_tokens   — prompt tokens served from shared pages,
+  * partial_hit_tokens  — of which: token-level boundary-head tokens,
+  * prefill_calls       — jitted prefill device computations,
+  * pages_grabbed       — pages physically allocated over the run
     ("pages saved" = unshared minus shared),
-  * cow_copies        — copy-on-write page copies (divergence cost).
+  * cow_copies / head_copies — copy-on-write page copies (divergence
+    cost) and partial-head seeds.
 
-  PYTHONPATH=src python benchmarks/prefix.py [--smoke]
+  PYTHONPATH=src python benchmarks/prefix.py [--smoke] [--page-granular]
+
+``--page-granular`` restricts the shared run to page-granular hits
+(pre-token-level behavior) for A/B comparison.
 """
 from __future__ import annotations
 
@@ -29,11 +39,17 @@ from repro.serving.frontend import ServingFrontend
 
 PAGE = 4
 
+# (tag, share_prefix, token_level_prefix)
+MODES = [("unshared", False, False),
+         ("page-level", True, False),
+         ("token-level", True, True)]
+
 
 def build_workload(n_requests: int, n_prompts: int, sys_len: int,
                    uniq_len: int, output: int, vocab: int, seed: int = 0):
     """Round-robin over K system prompts, each request adding a unique
-    user suffix — the paper's tool-calling / chatbot shape."""
+    user suffix — the paper's tool-calling / chatbot shape.  With
+    ``sys_len % PAGE != 0`` every divergence falls mid-page."""
     rng = np.random.default_rng(seed)
     systems = [rng.integers(1, vocab, sys_len).tolist()
                for _ in range(n_prompts)]
@@ -47,15 +63,16 @@ def build_workload(n_requests: int, n_prompts: int, sys_len: int,
     return reqs
 
 
-def run(share: bool, reqs, *, max_len: int, total_pages: int,
-        arch: str = "smollm-135m", seed: int = 0):
+def run(share: bool, token_level: bool, reqs, *, max_len: int,
+        total_pages: int, arch: str = "smollm-135m", seed: int = 0):
     cfg = get_reduced(arch)
     params = init_params(jax.random.PRNGKey(seed), cfg)
     eng = ServingEngine(cfg, params,
                         EngineConfig(max_slots=8, max_len=max_len,
                                      page_size=PAGE,
                                      total_pages=total_pages,
-                                     share_prefix=share))
+                                     share_prefix=share,
+                                     token_level_prefix=token_level))
     sched = SLOsServeScheduler(
         cpu_scale_perf_model(),
         SchedulerConfig(page_size=PAGE, prefill_emits_first_token=True))
@@ -69,56 +86,77 @@ def run(share: bool, reqs, *, max_len: int, total_pages: int,
     wall = time.time() - t0
     return dict(streams=streams, stats=stats, wall=wall,
                 hits=eng.counters["prefix_hit_tokens"],
+                partial=eng.kv.partial_hit_tokens,
                 prefill_calls=eng.counters["prefill_calls"],
-                pages=eng.kv.pages_grabbed, cow=eng.kv.cow_copies)
+                pages=eng.kv.pages_grabbed, cow=eng.kv.cow_copies,
+                heads=eng.kv.partial_head_copies)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes + invariant asserts for CI")
+    ap.add_argument("--page-granular", action="store_true",
+                    help="restrict the shared run to page-granular hits "
+                         "(skip the token-level mode)")
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--prompts", type=int, default=3,
                     help="distinct system prompts (K)")
     args = ap.parse_args()
+    if args.smoke and args.page_granular:
+        ap.error("--page-granular is incompatible with --smoke "
+                 "(the smoke asserts compare all three modes)")
 
     if args.smoke:
-        n_req, n_sys, sys_len, uniq_len, output = 6, 2, 24, 4, 4
+        n_req, n_sys, sys_len, uniq_len, output = 6, 2, 26, 4, 4
         max_len, total_pages = 64, 256
     else:
         n_req, n_sys = args.requests, args.prompts
-        sys_len, uniq_len, output = 48, 8, 8
+        sys_len, uniq_len, output = 50, 8, 8
         max_len, total_pages = 128, 1024
 
     cfg = get_reduced("smollm-135m")
     print(f"{n_req} requests over {n_sys} system prompts "
           f"({sys_len} shared + {uniq_len} unique tokens, page={PAGE})")
+    modes = [m for m in MODES
+             if not (args.page_granular and m[0] == "token-level")]
     res = {}
-    for share in (False, True):
+    for tag, share, token_level in modes:
         # fresh Request objects per run: serving mutates their state
-        res[share] = run(share,
-                         build_workload(n_req, n_sys, sys_len, uniq_len,
-                                        output, cfg.vocab),
-                         max_len=max_len, total_pages=total_pages)
-        tag = "shared" if share else "unshared"
-        r = res[share]
-        print(f"{tag:>9}: prefix_hit_tokens={r['hits']:>5}  "
+        res[tag] = run(share, token_level,
+                       build_workload(n_req, n_sys, sys_len, uniq_len,
+                                      output, cfg.vocab),
+                       max_len=max_len, total_pages=total_pages)
+        r = res[tag]
+        print(f"{tag:>12}: prefix_hit_tokens={r['hits']:>5} "
+              f"(partial={r['partial']:>3})  "
               f"prefill_calls={r['prefill_calls']:>4}  "
-              f"pages_grabbed={r['pages']:>5}  cow_copies={r['cow']:>3}  "
-              f"wall={r['wall']:.1f}s")
-    saved = res[False]["pages"] - res[True]["pages"]
-    print(f"pages saved: {saved}  "
-          f"prefill calls saved: "
-          f"{res[False]['prefill_calls'] - res[True]['prefill_calls']}")
+              f"pages_grabbed={r['pages']:>5}  cow={r['cow']:>3}  "
+              f"heads={r['heads']:>3}  wall={r['wall']:.1f}s")
+    best = modes[-1][0]
+    saved = res["unshared"]["pages"] - res[best]["pages"]
+    print(f"pages saved ({best}): {saved}  prefill calls saved: "
+          f"{res['unshared']['prefill_calls'] - res[best]['prefill_calls']}")
+    if "token-level" in res and "page-level" in res:
+        gap = res["token-level"]["hits"] - res["page-level"]["hits"]
+        print(f"token-level vs page-granular hit tokens: "
+              f"{res['token-level']['hits']} vs {res['page-level']['hits']} "
+              f"(+{gap} from boundary heads)")
 
     if args.smoke:
-        assert res[True]["hits"] > 0, "smoke: expected prefix hits"
-        assert res[False]["hits"] == 0
-        assert res[True]["prefill_calls"] < res[False]["prefill_calls"], \
+        assert res["page-level"]["hits"] > 0, "smoke: expected prefix hits"
+        assert res["unshared"]["hits"] == 0
+        assert res["token-level"]["hits"] > res["page-level"]["hits"], \
+            "smoke: token-level must beat page-granular on mid-page mixes"
+        assert res["token-level"]["partial"] > 0
+        assert res["page-level"]["partial"] == 0
+        assert res["token-level"]["prefill_calls"] \
+            < res["unshared"]["prefill_calls"], \
             "smoke: sharing must reduce prefill device calls"
         assert saved > 0, "smoke: sharing must reduce pages allocated"
-        assert res[True]["streams"] == res[False]["streams"], \
-            "smoke: greedy streams must be bit-identical sharing on/off"
+        streams = [r["streams"] for r in res.values()]
+        assert all(s == streams[0] for s in streams), \
+            "smoke: greedy streams must be bit-identical across modes"
         print("smoke OK")
 
 

@@ -85,24 +85,33 @@ class SLOsServeScheduler:
     # ------------------------------------------------------------------ #
     def plan(self, now: float, running: list[Request], new: list[Request],
              mem_free: int, admission_only: bool = False,
-             cached_prefix: Optional[dict[int, int]] = None) -> PlanResult:
+             cached_prefix: Optional[dict[int, int]] = None,
+             live_prefix: Optional[dict[int, int]] = None) -> PlanResult:
         """One scheduler invocation.  ``admission_only`` skips the batch
         materialization (Algorithm 2) — routing verdicts (§4.2) only need
         the DP's admit/decline decision, not the batch timeline.
 
         ``cached_prefix`` maps rid -> tokens of the request's prompt the
         serving engine already holds as shared prefix pages
-        (``PagedKVManager.probe_prefix``).  The DP then plans with the
-        *residual* prefill length: cached tokens consume no prefill
-        budget, so the same TTFT SLO admits more requests (the
-        prefix-cache counterpart of AdaServe's "spend the headroom"
-        principle).  The deadline itself stays a function of the full
-        prompt — the SLO is defined on the request, not on the work.
-        Memory demand stays the full reservation: zero-refcount cached
-        hit pages are already counted inside ``mem_free``, so discounting
-        them here would double-count the same headroom."""
+        (``PagedKVManager.probe_prefix``; token-exact with partial-page
+        matching).  The DP then plans with the *residual* prefill length:
+        cached tokens consume no prefill budget, so the same TTFT SLO
+        admits more requests (the prefix-cache counterpart of AdaServe's
+        "spend the headroom" principle).  The deadline itself stays a
+        function of the full prompt — the SLO is defined on the request,
+        not on the work.
+
+        ``live_prefix`` maps rid -> matched prefix pages currently MAPPED
+        by other requests (``PagedKVManager.live_prefix_pages``): sharing
+        them costs no free-pool capacity, so they shave the candidate's
+        memory-unit demand.  Zero-refcount cached hit pages must NOT be
+        discounted — they are already counted inside ``mem_free``, and
+        discounting them here would double-count the same headroom (which
+        is also why the cached_prefix token discount never touches
+        ``m``)."""
         cfg = self.cfg
         cached_prefix = cached_prefix or {}
+        live_prefix = live_prefix or {}
         new = sorted(new, key=lambda r: r.arrival)
         deferred = new[cfg.max_new_per_plan:]
         new = new[:cfg.max_new_per_plan]
@@ -157,7 +166,7 @@ class SLOsServeScheduler:
             cands.append(Candidate(
                 req=r, ddl=max(ddl, cfg.min_ddl_slack),
                 p=max(r.current_stage.length - disc, 1),
-                m=self.mem_units(r),
+                m=max(self.mem_units(r) - live_prefix.get(r.rid, 0), 1),
                 tier=self._tier_of(tiers, r), value=r.value, forced=False))
 
         # --- speculative decoding plan (per-tier speculation lengths)

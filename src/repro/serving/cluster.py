@@ -51,6 +51,7 @@ class ClusterStats:
     preempted: int = 0       # real PagedKVManager.preempt invocations
     tokens_out: int = 0
     prefix_hit_tokens: int = 0   # prompt tokens served from shared pages
+    partial_hit_tokens: int = 0  # of which: token-level boundary-head hits
     affinity_routed: int = 0     # first probes placed by prefix affinity
 
 
@@ -87,7 +88,8 @@ class ClusterFrontend:
               replica_pages: int = None, page_size: int = 16,
               max_slots: int = 8, max_len: int = 256, dtype=jnp.float32,
               seed: int = 0, draft: Optional[tuple] = None,
-              share_prefix: bool = True) -> "ClusterFrontend":
+              share_prefix: bool = True,
+              token_level_prefix: bool = True) -> "ClusterFrontend":
         """Carve ``total_pages`` (one shared budget) into per-replica paged
         KV pools and stand up N real engines over shared ``params``.
         ``replica_pages`` defaults to an even split; setting it higher lets
@@ -103,7 +105,8 @@ class ClusterFrontend:
                 EngineConfig(max_slots=max_slots, max_len=max_len,
                              page_size=page_size, total_pages=replica_pages,
                              dtype=dtype, seed=seed + i,
-                             share_prefix=share_prefix),
+                             share_prefix=share_prefix,
+                             token_level_prefix=token_level_prefix),
                 draft=draft, kv_budget=budget)
             cfg = sched_cfg or SchedulerConfig(
                 page_size=page_size, prefill_emits_first_token=True)
@@ -139,6 +142,7 @@ class ClusterFrontend:
             s.tokens_out += d.stats.tokens_out
             s.preempted += d.engine.counters["preemptions"]
             s.prefix_hit_tokens += d.engine.counters["prefix_hit_tokens"]
+            s.partial_hit_tokens += d.engine.kv.partial_hit_tokens
         return s
 
     # ----------------------------- routing ----------------------------- #

@@ -26,6 +26,7 @@ one-device-call-per-decode-group invariant.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Optional
 
 import jax
@@ -47,6 +48,15 @@ def _bucket(n: int, buckets=(8, 16, 32, 64, 128, 256, 512, 1024, 2048)) -> int:
     return ((n + 2047) // 2048) * 2048
 
 
+def _env_flag(name: str, default: bool) -> bool:
+    """CI sharing-matrix override: flips an EngineConfig DEFAULT from the
+    environment (read per instantiation, so monkeypatching works).  Tests
+    that assert sharing behavior pass the field explicitly and are
+    unaffected."""
+    v = os.environ.get(name)
+    return default if v is None else v.lower() not in ("0", "false", "off")
+
+
 @dataclasses.dataclass
 class EngineConfig:
     max_slots: int = 8                # max concurrent sequences
@@ -60,7 +70,13 @@ class EngineConfig:
     # with matching leading tokens (refcount + copy-on-write, kvcache.py).
     # Auto-disabled for SSM-bearing models and per-request when encoder
     # conditioning makes prompt KV depend on more than the token stream.
-    share_prefix: bool = True
+    share_prefix: bool = dataclasses.field(
+        default_factory=lambda: _env_flag("REPRO_SHARE_PREFIX", True))
+    # Token-level partial-page matching: a prompt diverging mid-page still
+    # reuses the verified head of the boundary page via a CoW'd copy
+    # (kvcache.py module docstring).  False = page-granular hits only.
+    token_level_prefix: bool = dataclasses.field(
+        default_factory=lambda: _env_flag("REPRO_TOKEN_LEVEL_PREFIX", True))
     # Prefix-aware admission: shave the driver's up-front expected_total
     # reservation by the probed cached-prefix hit, so requests whose
     # prompt is mostly resident admit under page pressure that a
@@ -102,7 +118,8 @@ class ServingEngine:
                                  max_len=self.ecfg.max_len,
                                  dtype=self.ecfg.dtype,
                                  budget=kv_budget,
-                                 share_prefix=self.ecfg.share_prefix)
+                                 share_prefix=self.ecfg.share_prefix,
+                                 token_level=self.ecfg.token_level_prefix)
         self.reqs: dict[int, RequestCtx] = {}
         self.key = jax.random.PRNGKey(self.ecfg.seed)
         self._moe_cf = (float(cfg.moe.n_experts) / cfg.moe.top_k

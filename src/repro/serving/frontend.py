@@ -115,25 +115,39 @@ class ReplicaDriver:
         scheduler admit ``req`` against its live state right now?  With
         ``prompt``, the probe credits this replica's cached prefix — the
         verdict a prefix-affinity hop is after."""
+        cached, live = self._discounts([req], prompt)
         res = self.sched.plan(now, self.running, [req], self._mem_free(),
                               admission_only=True,
-                              cached_prefix=self._discounts([req], prompt))
+                              cached_prefix=cached, live_prefix=live)
         return any(r.rid == req.rid for r in res.admitted)
 
     def _discounts(self, reqs: list[Request],
-                   prompt: Optional[list] = None) -> Optional[dict]:
-        """Cached-prefix discounts for the DP planner: tokens of each
-        request's prompt already resident as shared pages."""
+                   prompt: Optional[list] = None
+                   ) -> tuple[Optional[dict], Optional[dict]]:
+        """Cached-prefix discounts for the DP planner: per request, the
+        token-exact resident-prompt hit (discounts prefill tokens) and
+        the matched pages other requests currently map (discounts memory
+        units — cached zero-ref matches already sit inside ``mem_free``).
+        One ``prefix_discounts`` chain walk yields both.  Pages resident
+        only in the best-effort tier are excluded from the memory
+        discount: ``_mem_free`` already counts them as preemptable-free
+        supply, and one page must never discount demand and inflate
+        supply at once."""
         kv = self.engine.kv
-        out = {}
+        be_pages = self._be_page_set()
+        toks, pages = {}, {}
         for r in reqs:
             if r.rid in self.encs:
                 continue      # enc-conditioned prompts never share
             pr = prompt if prompt is not None else self.prompts.get(r.rid)
-            hit = kv.probe_prefix(pr) if pr is not None else 0
+            if pr is None:
+                continue
+            hit, live = kv.prefix_discounts(pr, exclude_pages=be_pages)
             if hit:
-                out[r.rid] = hit
-        return out or None
+                toks[r.rid] = hit
+            if live:
+                pages[r.rid] = live
+        return toks or None, pages or None
 
     def _mem_free(self) -> int:
         # pages reclaimable by preempting the best-effort tier count as
@@ -145,6 +159,16 @@ class ReplicaDriver:
         return sum(len(kv.tables.get(e.req.rid, []))
                    for e in self.be.entries if e.req.kv_resident)
 
+    def _be_page_set(self) -> set[int]:
+        """Pages mapped by kv-resident best-effort requests — the pages
+        ``_mem_free`` treats as preemptable-free supply."""
+        kv = self.engine.kv
+        out: set[int] = set()
+        for e in self.be.entries:
+            if e.req.kv_resident:
+                out.update(kv.tables.get(e.req.rid, ()))
+        return out
+
     # --------------------------- main loop ----------------------------- #
     def drive(self, now: float, max_batches: int = 8) -> DriveResult:
         """One scheduler invocation + up to ``max_batches`` engine batches;
@@ -153,8 +177,9 @@ class ReplicaDriver:
         res = DriveResult()
         arrivals = [r for r in self.new_q if r.arrival <= now]
         self.new_q = [r for r in self.new_q if r.arrival > now]
+        cached, live = self._discounts(arrivals)
         plan = self.sched.plan(now, self.running, arrivals, self._mem_free(),
-                               cached_prefix=self._discounts(arrivals))
+                               cached_prefix=cached, live_prefix=live)
         for r in plan.admitted:
             if self._admit(r, now):
                 r.state = RequestState.RUNNING
@@ -244,8 +269,12 @@ class ReplicaDriver:
         if not ok:
             # fresh demand is the full reservation minus LIVE shared-prefix
             # pages (mapped by others, free to share); cached matches are
-            # already inside free_pages and must not be discounted twice
-            disc = eng.kv.live_prefix_pages(prompt) if enc is None else 0
+            # already inside free_pages, and best-effort-resident matches
+            # are about to be preempted into it — neither may be
+            # discounted twice
+            disc = eng.kv.live_prefix_pages(
+                prompt, exclude_pages=self._be_page_set()) \
+                if enc is None else 0
             need = eng.kv.pages_needed(expected) - disc
             if need > eng.kv.free_pages:
                 self._preempt_for(need - eng.kv.free_pages)

@@ -44,6 +44,22 @@ request, §2.1 scenarios):
   new request's block table with refcount bumps; only the residual pages
   are freshly allocated.  A preempted victim's published pages survive
   preemption in the cached pool, so its recompute replay re-shares them.
+* **Token-level partial-page matching** (``token_level=True``): when a
+  prompt diverges *mid-page*, the full-page chain stops at the boundary
+  but the request need not forfeit the matched head of the boundary
+  page.  A parent index (``children``: chain hash -> published pages
+  whose chunk extends that chain) finds candidate boundary pages; the
+  longest token-verified common head wins, the donor page is CoW-copied
+  into a fresh exclusively-owned page (the jitted donated scatter of
+  ``_copy_pages``; position-identical content, so streams stay
+  bit-identical), and only the head tokens count toward the hit.  The
+  tail of the copied page holds donor garbage that the residual prefill
+  overwrites before anything can attend to it (attention never reads
+  past the write frontier).  The head page is private from birth —
+  refcount 1, unpublished — so ``check_writable`` accepts the residual
+  chunk that starts mid-page on it.  Matching stays verification-first:
+  candidates are compared token-by-token, so a chain-hash collision
+  degrades to a miss at token granularity too.
 * **Copy-on-write**: ``ensure_writable`` is the write barrier the engine
   invokes before any KV write.  A write touching a page with refcount > 1
   device-copies the page into a fresh one and remaps this request's block
@@ -61,6 +77,7 @@ request, §2.1 scenarios):
 """
 from __future__ import annotations
 
+import functools
 import math
 from collections import OrderedDict
 from typing import Optional
@@ -78,6 +95,28 @@ def _copy_bucket(n: int, buckets=(1, 2, 4, 8)) -> int:
         if n <= b:
             return b
     return ((n + 7) // 8) * 8
+
+
+@functools.partial(jax.jit, static_argnums=(1,), donate_argnums=(0,))
+def _copy_pages_prog(pools, axes, si, di):
+    """Device copy pages ``si`` onto pages ``di`` in every paged pool leaf
+    (``axes[seg] is None`` skips SSM lane state, which is not paged).  The
+    pool argument is DONATED — XLA scatters the few pages in place instead
+    of materializing a fresh full-size pool per leaf.  Module-level (axes
+    are static) so every manager with the same pool shapes shares one
+    compilation per copy bucket."""
+    out = []
+    for pool, ax in zip(pools, axes):
+        if ax is None:
+            out.append(pool)
+            continue
+
+        def cp(leaf, ax=ax):
+            if ax == 0:
+                return leaf.at[di].set(leaf[si])
+            return leaf.at[:, di].set(leaf[:, si])
+        out.append(jax.tree.map(cp, pool))
+    return out
 
 
 class SharedPageBudget:
@@ -193,7 +232,7 @@ class PagedKVManager(PageAllocator):
                  page_size: int = 16, max_seqs: int = 8,
                  max_len: int = 512, dtype=jnp.float32,
                  budget: Optional[SharedPageBudget] = None,
-                 share_prefix: bool = False):
+                 share_prefix: bool = False, token_level: bool = True):
         super().__init__(total_pages, page_size, budget=budget)
         self.cfg = cfg
         self.max_seqs = max_seqs
@@ -209,10 +248,15 @@ class PagedKVManager(PageAllocator):
         # ---- prefix sharing state (module docstring) ----
         self.share_prefix = share_prefix and not any(
             kind == "ssm" for kind, _ in cfg.segments())
+        self.token_level = token_level        # partial-page head matching
         self.refcount = np.zeros((total_pages,), np.int32)
         self.prefix_index: dict[int, int] = {}       # chain hash -> page
         self.page_key: dict[int, int] = {}           # page -> chain hash
         self.page_tokens: dict[int, tuple] = {}      # page -> exact chunk
+        # parent links for token-level boundary matching: page -> chain
+        # hash BEFORE its chunk, and the inverse multi-map
+        self.page_parent: dict[int, Optional[int]] = {}
+        self.children: dict[Optional[int], set[int]] = {}
         self.cached: OrderedDict[int, int] = OrderedDict()  # LRU, zero-ref
         # per-rid registration cursor: (full pages processed, chain hash
         # there) so repeated register_prefix calls hash incrementally
@@ -220,7 +264,13 @@ class PagedKVManager(PageAllocator):
         self.cow_copies = 0
         self.pages_grabbed = 0
         self.prefix_evictions = 0
-        self._copy_fn = None         # jitted CoW page copy, built lazily
+        self.partial_head_copies = 0   # boundary pages CoW'd for a head hit
+        self.partial_hit_tokens = 0    # hit tokens beyond full-page chains
+        # head tokens mapped by the LAST _share_pages, committed to
+        # partial_hit_tokens only once the admission sticks (a bounced
+        # admit would otherwise leave partial_hit_tokens exceeding the
+        # engine's prefix_hit_tokens, its superset)
+        self._partial_pending = 0
 
     # ------------------------ physical page ops ------------------------- #
     @property
@@ -251,10 +301,8 @@ class PagedKVManager(PageAllocator):
             if self.free:
                 p = self.free.pop()
             else:
-                p, key = self.cached.popitem(last=False)   # LRU victim
-                del self.prefix_index[key]
-                del self.page_key[p]
-                self.page_tokens.pop(p, None)
+                p, _ = self.cached.popitem(last=False)     # LRU victim
+                self._unpublish(p)
                 self.prefix_evictions += 1
             self.refcount[p] = 1
             out.append(p)
@@ -326,6 +374,7 @@ class PagedKVManager(PageAllocator):
         if self.share_prefix and tokens is not None:
             hit = self._share_pages(rid, tokens)
         if not self.extend(rid, expected_total):
+            self._partial_pending = 0      # the mapped hit is dropped too
             self._drop_pages(rid)
             if fresh_slot:
                 # decline leaves no trace: a bounced request may never
@@ -333,6 +382,8 @@ class PagedKVManager(PageAllocator):
                 self.tables.pop(rid, None)
                 self.free_seqs.append(self.seq_of.pop(rid))
             return False
+        self.partial_hit_tokens += self._partial_pending
+        self._partial_pending = 0
         self.seq_len[self.seq_of[rid]] = hit
         return True
 
@@ -350,9 +401,12 @@ class PagedKVManager(PageAllocator):
                 and not self.tables.get(rid):
             hit = self._share_pages(rid, tokens)
         if not self.extend(rid, expected_total):
+            self._partial_pending = 0      # the mapped hit is dropped too
             if hit:
                 self._drop_pages(rid)
             return None
+        self.partial_hit_tokens += self._partial_pending
+        self._partial_pending = 0
         self.seq_len[self.seq_of[rid]] = hit
         return hit
 
@@ -428,13 +482,36 @@ class PagedKVManager(PageAllocator):
         discount and the cluster's prefix-affinity routing probe with this
         before any pages move.  Mirrors ``_share_pages``' budget
         truncation — reviving a cached (zero-ref) page costs one budget
-        page, so a budget-starved replica reports only the hit it can
-        deliver (an optimistic probe would admit tight-TTFT requests on a
-        residual the engine then can't grant)."""
-        pages, hit = self._match_pages(tokens)
-        if not pages:
-            return 0
+        page, and a partial-page head hit costs one freshly grabbed page
+        (physical AND budget) — so a starved replica reports only the hit
+        it can deliver (an optimistic probe would admit tight-TTFT
+        requests on a residual the engine then can't grant)."""
+        return self.prefix_discounts(tokens)[0]
+
+    def live_prefix_pages(self, tokens, exclude_pages=None) -> int:
+        """Matched prefix pages currently mapped by other requests.  These
+        cost no free-pool capacity to share; cached (zero-ref) matches DO
+        — they already count inside ``free_pages`` — so admission-demand
+        discounts must use this, not the full hit.  A partial-page head
+        never counts: its CoW copy consumes a fresh page.
+        ``exclude_pages`` drops pages the caller already counts as
+        reclaimable supply (e.g. best-effort-resident pages), so one page
+        never discounts demand and inflates supply at once."""
+        return self.prefix_discounts(tokens, exclude_pages)[1]
+
+    def prefix_discounts(self, tokens,
+                         exclude_pages=None) -> tuple[int, int]:
+        """One chain walk returning ``(probe hit tokens, live pages)`` —
+        the planner needs both every tick, and walking/hash-verifying the
+        chain twice would double the host-side cost for long prompts."""
+        pages, hit, partial = self._match_pages(tokens)
+        live = int(sum(1 for p in pages if self.refcount[p] > 0
+                       and (exclude_pages is None
+                            or p not in exclude_pages)))
+        if not pages and partial is None:
+            return 0, live
         avail = self.budget.available if self.budget is not None else None
+        phys = len(self.free) + len(self.cached)
         usable = 0
         for p in pages:
             if self.refcount[p] > 0:
@@ -442,45 +519,87 @@ class PagedKVManager(PageAllocator):
             elif avail is None or avail > 0:
                 if avail is not None:
                     avail -= 1
+                phys -= 1          # revived out of the cached pool
                 usable += 1
             else:
+                partial = None     # _share_pages truncates the same way
                 break
-        return min(hit, usable * self.page_size)
+        out = min(hit, usable * self.page_size)
+        # the boundary head needs one grabbable page: free/cached beyond
+        # the revivals above, plus one budget page (_cow_head's grab)
+        if partial is not None and out == hit and phys > 0 \
+                and (avail is None or avail > 0):
+            out += partial[1]
+        return out, live
 
-    def live_prefix_pages(self, tokens) -> int:
-        """Matched prefix pages currently mapped by other requests.  These
-        cost no free-pool capacity to share; cached (zero-ref) matches DO
-        — they already count inside ``free_pages`` — so admission-demand
-        discounts must use this, not the full hit."""
-        pages, _ = self._match_pages(tokens)
-        return int(sum(1 for p in pages if self.refcount[p] > 0))
-
-    def _match_pages(self, tokens) -> tuple[list[int], int]:
-        """(pages, hit_tokens) of the longest published chain for
-        ``tokens`` — the last page may be consumed partially when the
-        ``len - 1`` cap bites (its overwrite then goes through CoW)."""
+    def _match_pages(self, tokens) -> tuple[list[int], int,
+                                            Optional[tuple[int, int]]]:
+        """(pages, hit_tokens, partial) of the longest published chain for
+        ``tokens``.  ``pages`` are full-page chain matches; ``hit`` is
+        their token count capped at ``len(tokens) - 1`` (when the cap
+        bites mid-chain, the last page is consumed partially and its
+        overwrite goes through CoW — ``partial`` is None there).
+        ``partial = (donor_page, head_len)`` extends an uncapped chain
+        with a token-verified head of a published boundary page."""
         if not self.share_prefix or tokens is None or len(tokens) < 2:
-            return [], 0
+            return [], 0, None
         ps = self.page_size
         h, pages = None, []
         for i in range(len(tokens) // ps):
             chunk = tuple(int(t) for t in tokens[i * ps:(i + 1) * ps])
-            h = self._chain(h, chunk)
-            p = self.prefix_index.get(h)
+            nh = self._chain(h, chunk)
+            p = self.prefix_index.get(nh)
             # hash match alone is not proof: verify the page's exact
             # tokens so a 64-bit chain collision can never map another
             # prompt's KV (it degrades to a miss instead)
             if p is None or self.page_tokens.get(p) != chunk:
                 break
+            h = nh
             pages.append(p)
         hit = min(len(pages) * ps, len(tokens) - 1)
-        return pages[:self.pages_needed(hit) if hit else 0], hit
+        if hit < len(pages) * ps:
+            return pages[:self.pages_needed(hit) if hit else 0], hit, None
+        return pages, hit, self._match_head(h, tokens, hit)
+
+    def _match_head(self, parent: Optional[int], tokens,
+                    start: int) -> Optional[tuple[int, int]]:
+        """Longest token-verified head of a published boundary page that
+        extends chain ``parent`` past position ``start`` — the token-level
+        refinement of the page-granular chain walk.  Candidates come from
+        the ``children`` parent index (pages published directly after this
+        chain), are compared token-by-token (a colliding hash can only
+        ever degrade to a shorter verified head, never a wrong one), and
+        the head stays under the ``len(tokens) - 1`` completion cap.
+        Smallest page id breaks length ties, for determinism."""
+        if not self.token_level:
+            return None
+        room = min(len(tokens) - 1 - start, self.page_size)
+        if room <= 0:
+            return None
+        nxt = [int(t) for t in tokens[start:start + room]]
+        best = None
+        for p in sorted(self.children.get(parent, ())):
+            chunk = self.page_tokens.get(p)
+            if not chunk:
+                continue
+            m = 0
+            for a, b in zip(chunk, nxt):
+                if a != b:
+                    break
+                m += 1
+            if m > 0 and (best is None or m > best[1]):
+                best = (p, m)
+        return best
 
     def _share_pages(self, rid: int, tokens) -> int:
         """Map the longest published chain into rid's (empty) block table
         with refcount bumps.  Reviving a cached (zero-ref) page re-reserves
-        one budget page; a failed reservation truncates the hit there."""
-        pages, hit = self._match_pages(tokens)
+        one budget page; a failed reservation truncates the hit there.  A
+        partial-page boundary match appends a CoW copy of the donor's head
+        (a fresh, private, unpublished page) and counts only the verified
+        head tokens."""
+        self._partial_pending = 0
+        pages, hit, partial = self._match_pages(tokens)
         taken: list[int] = []
         for p in pages:
             if self.refcount[p] > 0:
@@ -493,11 +612,34 @@ class PagedKVManager(PageAllocator):
             taken.append(p)
         if len(taken) < len(pages):
             hit = min(hit, len(taken) * self.page_size)
+            partial = None
+        if partial is not None:
+            head = self._cow_head(partial[0])
+            if head is not None:
+                taken.append(head)
+                hit += partial[1]
+                self._partial_pending = partial[1]
         if not taken:
             return 0
         self.tables.setdefault(rid, []).extend(taken)
         self._map_pages(rid, 0, taken)
         return hit
+
+    def _cow_head(self, donor: int) -> Optional[int]:
+        """Copy the published donor page into a fresh exclusively-owned
+        page (refcount 1, unpublished) so its matched token head can seed
+        a new request's boundary page; None when pages or budget are
+        short.  ``_grab_pages`` may evict the donor itself (a zero-ref
+        cached page at the LRU end): its content is already in place, so
+        the device copy is skipped."""
+        fresh = self._grab_pages(1)
+        if fresh is None:
+            return None
+        q = fresh[0]
+        if q != donor:
+            self._copy_pages([donor], [q])
+        self.partial_head_copies += 1
+        return q
 
     def register_prefix(self, rid: int, tokens) -> None:
         """Publish rid's full, final pages into the prefix index.  Call
@@ -516,15 +658,41 @@ class PagedKVManager(PageAllocator):
         n_full = min(len(tokens) // ps, len(pages))
         for i in range(done, n_full):
             chunk = tuple(int(t) for t in tokens[i * ps:(i + 1) * ps])
+            parent = h
             h = self._chain(h, chunk)
             p = pages[i]
             if h in self.prefix_index or p in self.page_key:
                 continue
-            self.prefix_index[h] = p
-            self.page_key[p] = h
-            self.page_tokens[p] = chunk
+            self._publish(p, h, parent, chunk)
         if n_full > done:
             self._reg_state[rid] = (n_full, h)
+
+    def _publish(self, p: int, h: int, parent: Optional[int],
+                 chunk: tuple) -> None:
+        """Insert page p into the prefix index under chain hash ``h``,
+        recording its parent link so token-level boundary matching can
+        enumerate the chain's published extensions."""
+        self.prefix_index[h] = p
+        self.page_key[p] = h
+        self.page_tokens[p] = chunk
+        self.page_parent[p] = parent
+        self.children.setdefault(parent, set()).add(p)
+
+    def _unpublish(self, p: int) -> None:
+        """Remove page p from the prefix index (CoW overwrite or LRU
+        eviction), including its parent/children links.  No-op for
+        unpublished pages."""
+        key = self.page_key.pop(p, None)
+        if key is None:
+            return
+        del self.prefix_index[key]
+        self.page_tokens.pop(p, None)
+        parent = self.page_parent.pop(p, None)
+        kids = self.children.get(parent)
+        if kids is not None:
+            kids.discard(p)
+            if not kids:
+                del self.children[parent]
 
     def ensure_writable(self, rid: int, start_tok: int,
                         n_tokens: int) -> None:
@@ -552,8 +720,7 @@ class PagedKVManager(PageAllocator):
         for i in range(first, last + 1):
             p = pages[i]
             if self.refcount[p] <= 1 and p in self.page_key:
-                del self.prefix_index[self.page_key.pop(p)]
-                self.page_tokens.pop(p, None)
+                self._unpublish(p)
         src, dst = [], []
         for i, q in zip(idx, fresh):
             p = pages[i]
@@ -579,9 +746,13 @@ class PagedKVManager(PageAllocator):
         """The write-set handoff to the fused prefill kernel: returns the
         pages covering cache positions ``[start_tok, start_tok+n_tokens)``
         after asserting every one passed the ``ensure_writable`` barrier
-        (exclusively owned, unpublished).  The kernel writes these pages
-        in-kernel with no further checks, so a violation here would break
-        the bit-identical sharing guarantee — fail loudly instead."""
+        (exclusively owned, unpublished).  ``start_tok`` may fall mid-page
+        — a token-level partial hit (or the ``len - 1`` cap) leaves the
+        residual chunk starting inside the boundary page, which by then is
+        a CoW'd head this request owns exclusively, so the same assertions
+        cover it.  The kernel writes these pages in-kernel with no further
+        checks, so a violation here would break the bit-identical sharing
+        guarantee — fail loudly instead."""
         pages = self.tables.get(rid, [])
         ps = self.page_size
         first = start_tok // ps
@@ -597,37 +768,19 @@ class PagedKVManager(PageAllocator):
         return out
 
     def _copy_pages(self, src: list[int], dst: list[int]) -> None:
-        """Device copy src pages onto dst pages in every paged pool leaf
-        (SSM lane state is not paged and has nothing to copy).  One jitted
-        call whose pool argument is DONATED — XLA scatters the few pages
-        in place instead of materializing a fresh full-size pool per leaf.
+        """Device copy src pages onto dst pages via the module-level
+        jitted program (``_copy_pages_prog``; shared across managers).
         Copy counts are bucketed — padded by repeating the last real
         (src, dst) pair, which rewrites the same value and so stays
         deterministic under duplicate scatter indices — so CoW batch
         sizes share compilations."""
-        if self._copy_fn is None:
-            axes = [None if kind == "ssm" else (1 if n > 1 else 0)
-                    for kind, n in self.cfg.segments()]
-
-            def run(pools, si, di):
-                out = []
-                for pool, ax in zip(pools, axes):
-                    if ax is None:
-                        out.append(pool)
-                        continue
-
-                    def cp(leaf, ax=ax):
-                        if ax == 0:
-                            return leaf.at[di].set(leaf[si])
-                        return leaf.at[:, di].set(leaf[:, si])
-                    out.append(jax.tree.map(cp, pool))
-                return out
-            self._copy_fn = jax.jit(run, donate_argnums=(0,))
+        axes = tuple(None if kind == "ssm" else (1 if n > 1 else 0)
+                     for kind, n in self.cfg.segments())
         B = _copy_bucket(len(src))
         pad = B - len(src)
         si = jnp.asarray(src + [src[-1]] * pad, jnp.int32)
         di = jnp.asarray(dst + [dst[-1]] * pad, jnp.int32)
-        self.pools = self._copy_fn(self.pools, si, di)
+        self.pools = _copy_pages_prog(self.pools, axes, si, di)
 
     # ------------------------ device-facing views ----------------------- #
     def table_rows(self, slots) -> jnp.ndarray:

@@ -357,6 +357,41 @@ def test_prefix_affinity_routes_to_warm_replica():
     assert cl2.drivers[1].stats.served == 1
 
 
+def test_prefix_affinity_scores_token_exact_hits():
+    """Token-level matching changes WHO wins the affinity probe: with two
+    replicas whose page-granular hits tie (one full page each), the
+    replica holding a longer token-verified boundary head wins under
+    token-level scoring — page-granular scoring can't see past the tie.
+    ``probe_prefix`` is the exact scoring function routing uses."""
+    from repro.serving.cluster import _Payload
+
+    family = list(range(100, 110))                 # 10-token prompt
+    half_page = family[:6] + [7, 8]                # shares 6, diverges
+
+    def seed(kv, seq, rid):
+        assert kv.admit(rid, len(seq), tokens=seq)
+        kv.seq_len[kv.seq_of[rid]] = len(seq)
+        kv.register_prefix(rid, seq)
+        kv.release(rid)                            # retire to cached pool
+
+    def first_choice(cl, want_probes):
+        # replica 0 holds exactly one full page of the family prefix;
+        # replica 1 holds one full page PLUS a published boundary page
+        # sharing a 2-token head with the probe
+        seed(cl.drivers[0].engine.kv, family[:4], 901)
+        seed(cl.drivers[1].engine.kv, half_page, 902)
+        assert [d.engine.kv.probe_prefix(family)
+                for d in cl.drivers] == want_probes
+        req = simple_request(7, 0.0, prompt=len(family), output=4,
+                             ttft_slowdown=8.0, tpot=0.15)
+        return cl._first_choice(_Payload(req, list(family), None, None))
+
+    tok = make_cluster(n=2)                        # token-level default
+    assert first_choice(tok, [4, 6]) == 1          # head breaks the tie
+    page = make_cluster(n=2, token_level_prefix=False)
+    assert first_choice(page, [4, 4]) == 0         # tie -> argmax first
+
+
 # -------------------------- acceptance e2e ------------------------------ #
 def test_burst_overflow_routes_and_preempts_on_two_replicas():
     """Fig. 11-style burst on REAL engines: one replica's pool overflows,

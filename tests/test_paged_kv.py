@@ -422,7 +422,9 @@ def test_preemption_replay_reshares_prefix():
     """A preempted request's published pages survive preemption in the
     cached pool; its recompute replay re-shares them (cheap) and still
     resumes the exact greedy stream."""
-    cfg, params, eng = make_engine(page_size=4, max_len=128, total_pages=32)
+    cfg, params, eng = make_engine(page_size=4, max_len=128, total_pages=32,
+                                   share_prefix=True)   # explicit: the CI
+    # sharing matrix flips the DEFAULT off, and this test asserts hits
     rng = np.random.default_rng(5)
     prompt = rng.integers(1, cfg.vocab, 20).tolist()
     ref = DenseReference(cfg, params)

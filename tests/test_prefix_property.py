@@ -1,0 +1,334 @@
+"""Property-based harness for the shared-page lifecycle of
+``PagedKVManager``.
+
+Random interleavings of publish / admit / resume / release / preempt /
+CoW-overwrite / eviction-pressure ops across TWO managers drawing on one
+``SharedPageBudget`` must preserve, after every op:
+
+  * refcount conservation — each page's refcount equals the number of
+    block tables holding it, and mapped / cached / free partition the
+    pool exactly,
+  * credit-once budget accounting — ``budget.used`` equals the sum of the
+    managers' ``used_pages`` (a shared page is counted once, credited
+    only when its refcount returns to zero),
+  * prefix-index + LRU invariants — ``prefix_index``/``page_key`` are
+    inverse bijections, every published page carries verification tokens
+    and a parent link, the ``children`` multi-map mirrors the parent
+    links, and cached (LRU) pages are exactly the zero-refcount published
+    ones,
+  * probe/share mirror — ``probe_prefix`` predicts exactly the hit a
+    successful ``admit``/``resume`` then delivers (including token-level
+    partial-page heads and budget/pool truncation).
+
+Prompts are drawn from a small pool of root streams with random cut
+points and divergent suffixes, so full-page chains, mid-page divergence,
+hash dedup and LRU churn all occur often.  The op/invariant harness
+(``LifecycleHarness``) is plain Python; a seeded-fuzz test drives it
+without extra dependencies, and the hypothesis stateful wrapper adds
+minimal-counterexample shrinking where hypothesis is installed.  The
+quick legs keep tier-1 fast; the ``slow``-marked thorough run (500+
+generated sequences, ISSUE 5 acceptance) belongs to the scheduled CI job
+(``REPRO_PROPERTY_EXAMPLES`` scales it further).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.serving.kvcache import PagedKVManager, SharedPageBudget
+
+try:
+    from hypothesis import settings, strategies as st
+    from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                     invariant, rule,
+                                     run_state_machine_as_test)
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+CFG = get_reduced("smollm-135m")
+PAGE = 2
+PAGES_PER_MGR = 10
+BUDGET = 16          # < 2 * PAGES_PER_MGR: budget truncation is reachable
+MAX_LEN = 16
+VOCAB = 6            # tiny alphabet: shared chunks + dedup occur often
+
+
+def check_lifecycle(kv: PagedKVManager) -> None:
+    """The full shared-pool contract (module docstring) for one manager."""
+    held: dict[int, int] = {}
+    for t in kv.tables.values():
+        for p in t:
+            held[p] = held.get(p, 0) + 1
+    for p in range(kv.total_pages):
+        assert kv.refcount[p] == held.get(p, 0), f"refcount drift page {p}"
+    # partition: mapped | cached | free, each page exactly once
+    assert sorted(list(held) + kv.free + list(kv.cached)) \
+        == list(range(kv.total_pages))
+    assert kv.used_pages == len(held)
+    # prefix index: inverse bijection + verification tokens + parent links
+    assert set(kv.prefix_index.values()) == set(kv.page_key)
+    for h, p in kv.prefix_index.items():
+        assert kv.page_key[p] == h
+    assert set(kv.page_tokens) == set(kv.page_key)
+    assert set(kv.page_parent) == set(kv.page_key)
+    kids_union = set()
+    for parent, kids in kv.children.items():
+        assert kids, "empty children bucket not pruned"
+        for p in kids:
+            assert kv.page_parent[p] == parent
+        kids_union |= kids
+    assert kids_union == set(kv.page_key)
+    for chunk in kv.page_tokens.values():
+        assert len(chunk) == kv.page_size
+    # LRU pool: exactly the zero-refcount published pages
+    for p in kv.cached:
+        assert kv.refcount[p] == 0 and p in kv.page_key
+        assert kv.cached[p] == kv.page_key[p]
+    # block-table mirror for live slots
+    bt = np.asarray(kv.block_tables)
+    for rid, pages in kv.tables.items():
+        if rid not in kv.seq_of:
+            continue
+        want = pages[:kv.max_pages_per_seq]
+        assert bt[kv.seq_of[rid]][:len(want)].tolist() == want, rid
+
+
+class LifecycleHarness:
+    """Executable model of the shared-page lifecycle: every op mirrors the
+    engine's calling contract, every ``check`` asserts the invariants."""
+
+    def __init__(self, roots: list[list[int]]):
+        self.budget = SharedPageBudget(BUDGET)
+        self.mgrs = [
+            PagedKVManager(CFG, total_pages=PAGES_PER_MGR, page_size=PAGE,
+                           max_seqs=3, max_len=MAX_LEN, budget=self.budget,
+                           share_prefix=True)
+            for _ in range(2)]
+        self.roots = roots
+        self.tokens: dict[tuple[int, int], list] = {}   # (mgr, rid) live
+        self.preempted: set[tuple[int, int]] = set()
+        self.next_rid = 0
+
+    def prompt(self, root_i: int, cut: int, suffix: list[int]) -> list[int]:
+        root = self.roots[root_i % len(self.roots)]
+        p = root[:max(2, cut % (len(root) + 1))] + suffix
+        return p[:MAX_LEN]
+
+    # ------------------------------- ops -------------------------------- #
+    def op_admit(self, mgr, root_i, cut, suffix, extra):
+        kv = self.mgrs[mgr]
+        tokens = self.prompt(root_i, cut, suffix)
+        rid = self.next_rid
+        self.next_rid += 1
+        probed = kv.probe_prefix(tokens)
+        expected = min(len(tokens) + extra, MAX_LEN)
+        if kv.admit(rid, expected, tokens=tokens):
+            # probe/share mirror: the read-only probe promised exactly
+            # the hit the admission delivered
+            assert kv.length(rid) == probed, (kv.length(rid), probed)
+            self.tokens[(mgr, rid)] = tokens
+        else:
+            assert rid not in kv.seq_of and rid not in kv.tables
+
+    def op_publish(self, key, n):
+        """Advance a live request's write frontier like the engine does:
+        reserve, CoW barrier, write-set check, then publish full pages."""
+        mgr, rid = key
+        kv = self.mgrs[mgr]
+        tokens = self.tokens[key]
+        cur = kv.length(rid)
+        L = min(n, len(tokens) - cur)
+        if L <= 0:
+            return
+        if not kv.extend(rid, cur + L):
+            return
+        try:
+            kv.ensure_writable(rid, cur, L)
+        except RuntimeError:
+            return          # transactional: nothing mutated
+        pages = kv.check_writable(rid, cur, L)
+        assert all(kv.refcount[p] == 1 for p in pages)
+        kv.seq_len[kv.seq_of[rid]] = cur + L
+        kv.register_prefix(rid, tokens[:cur + L])
+
+    def op_preempt(self, key):
+        mgr, rid = key
+        self.mgrs[mgr].preempt(rid)
+        assert not self.mgrs[mgr].tables.get(rid)
+        self.preempted.add(key)
+
+    def op_resume(self, key, extra):
+        mgr, rid = key
+        kv = self.mgrs[mgr]
+        tokens = self.tokens[key]
+        probed = kv.probe_prefix(tokens)
+        hit = kv.resume(rid, min(len(tokens) + extra, MAX_LEN),
+                        tokens=tokens)
+        if hit is None:
+            assert not kv.tables.get(rid)   # failed resume leaves nothing
+            return
+        assert hit == probed == kv.length(rid)
+        self.preempted.discard(key)
+
+    def op_release(self, key):
+        mgr, rid = key
+        self.mgrs[mgr].release(rid)
+        del self.tokens[key]
+        self.preempted.discard(key)
+
+    def op_evict(self, mgr, n_pages):
+        """Grab-and-free a block of pages: drains the free list first and
+        then LRU-evicts cached pages, exercising unpublish on eviction."""
+        kv = self.mgrs[mgr]
+        pages = kv._grab_pages(n_pages)
+        if pages is None:
+            return
+        for p in pages:
+            kv._unref(p)
+
+    # ----------------------------- invariants ---------------------------- #
+    def check(self):
+        for kv in self.mgrs:
+            check_lifecycle(kv)
+        # credit-once: the shared budget equals the managers' live usage
+        assert self.budget.used == sum(kv.used_pages for kv in self.mgrs)
+        assert 0 <= self.budget.used <= self.budget.total_pages
+
+
+# --------------------------- seeded-fuzz driver -------------------------- #
+def _fuzz_sequence(seed: int, n_ops: int) -> list:
+    """One random op interleaving; returns the op log (the counterexample
+    to paste into a regression test on failure)."""
+    rng = np.random.default_rng(seed)
+    roots = [rng.integers(1, VOCAB + 1, int(rng.integers(4, MAX_LEN - 1)))
+             .tolist() for _ in range(int(rng.integers(2, 4)))]
+    h = LifecycleHarness(roots)
+    log = [("roots", roots)]
+    for _ in range(n_ops):
+        live = sorted(set(h.tokens))
+        active = sorted(set(h.tokens) - h.preempted)
+        ops = ["admit", "evict"]
+        if active:
+            ops += ["publish", "publish", "preempt"]
+        if h.preempted:
+            ops += ["resume"]
+        if live:
+            ops += ["release"]
+        op = ops[int(rng.integers(len(ops)))]
+        if op == "admit":
+            args = (int(rng.integers(0, 3)), int(rng.integers(0, MAX_LEN)),
+                    rng.integers(1, VOCAB + 1,
+                                 int(rng.integers(0, 5))).tolist(),
+                    int(rng.integers(0, 7)))
+            h.op_admit(int(rng.integers(0, 2)), *args)
+        elif op == "publish":
+            h.op_publish(active[int(rng.integers(len(active)))],
+                         int(rng.integers(1, 9)))
+        elif op == "preempt":
+            h.op_preempt(active[int(rng.integers(len(active)))])
+        elif op == "resume":
+            pre = sorted(h.preempted)
+            h.op_resume(pre[int(rng.integers(len(pre)))],
+                        int(rng.integers(0, 5)))
+        elif op == "release":
+            h.op_release(live[int(rng.integers(len(live)))])
+        else:
+            h.op_evict(int(rng.integers(0, 2)),
+                       int(rng.integers(1, PAGES_PER_MGR + 1)))
+        log.append((op,))
+        h.check()
+    return log
+
+
+def test_shared_page_lifecycle_fuzz_quick():
+    """Tier-1 leg (no hypothesis needed): enough random interleavings to
+    catch accounting regressions fast."""
+    for seed in range(25):
+        _fuzz_sequence(seed, 25)
+
+
+@pytest.mark.slow
+def test_shared_page_lifecycle_fuzz_thorough():
+    """Scheduled-job leg: 500+ generated op sequences (ISSUE 5
+    acceptance); REPRO_PROPERTY_EXAMPLES scales it up further."""
+    n = max(int(os.environ.get("REPRO_PROPERTY_EXAMPLES", "0")), 500)
+    for seed in range(n):
+        _fuzz_sequence(seed, 40)
+
+
+# ------------------------ hypothesis stateful wrapper -------------------- #
+if HAVE_HYPOTHESIS:
+    ALPHA = st.integers(1, VOCAB)
+
+    class SharedPageLifecycle(RuleBasedStateMachine):
+        """Thin wrapper over LifecycleHarness: hypothesis picks the op
+        interleaving and shrinks failures to a minimal op sequence."""
+
+        @initialize(roots=st.lists(
+            st.lists(ALPHA, min_size=4, max_size=MAX_LEN - 2),
+            min_size=2, max_size=3))
+        def setup(self, roots):
+            self.h = LifecycleHarness(roots)
+
+        def _pick(self, data, pool, label):
+            keys = sorted(pool)
+            if not keys:
+                return None
+            return data.draw(st.sampled_from(keys), label=label)
+
+        @rule(mgr=st.integers(0, 1), root_i=st.integers(0, 2),
+              cut=st.integers(0, MAX_LEN), suffix=st.lists(ALPHA, max_size=4),
+              extra=st.integers(0, 6))
+        def admit(self, mgr, root_i, cut, suffix, extra):
+            self.h.op_admit(mgr, root_i, cut, suffix, extra)
+
+        @rule(data=st.data(), n=st.integers(1, 8))
+        def publish(self, data, n):
+            key = self._pick(data, set(self.h.tokens) - self.h.preempted,
+                             "pub")
+            if key is not None:
+                self.h.op_publish(key, n)
+
+        @rule(data=st.data())
+        def preempt(self, data):
+            key = self._pick(data, set(self.h.tokens) - self.h.preempted,
+                             "pre")
+            if key is not None:
+                self.h.op_preempt(key)
+
+        @rule(data=st.data(), extra=st.integers(0, 4))
+        def resume(self, data, extra):
+            key = self._pick(data, self.h.preempted, "res")
+            if key is not None:
+                self.h.op_resume(key, extra)
+
+        @rule(data=st.data())
+        def release(self, data):
+            key = self._pick(data, set(self.h.tokens), "rel")
+            if key is not None:
+                self.h.op_release(key)
+
+        @rule(mgr=st.integers(0, 1), n_pages=st.integers(1, PAGES_PER_MGR))
+        def evict(self, mgr, n_pages):
+            self.h.op_evict(mgr, n_pages)
+
+        @invariant()
+        def lifecycle_invariants(self):
+            if hasattr(self, "h"):
+                self.h.check()
+
+    def _run_machine(max_examples: int, steps: int) -> None:
+        run_state_machine_as_test(
+            SharedPageLifecycle,
+            settings=settings(max_examples=max_examples,
+                              stateful_step_count=steps, deadline=None))
+
+    def test_shared_page_lifecycle_hypothesis_quick():
+        _run_machine(40, 20)
+
+    @pytest.mark.slow
+    def test_shared_page_lifecycle_hypothesis_thorough():
+        n = max(int(os.environ.get("REPRO_PROPERTY_EXAMPLES", "0")), 500)
+        _run_machine(n, 40)

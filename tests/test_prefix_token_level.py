@@ -1,0 +1,380 @@
+"""Token-level partial-page prefix matching (ISSUE 5).
+
+Three layers of coverage:
+
+  * the bit-identical stream MATRIX: the six paper scenario mixes
+    (summarization, coding, chatbot, tool-calling, reasoning, multi-stage
+    agent) each produce identical greedy streams with sharing off /
+    page-granular / token-level matching, while token-level hit tokens
+    strictly exceed the page-granular baseline (the §3 capacity lever:
+    the DP discount becomes exact instead of rounded down to a page),
+  * forced mid-page divergence at the manager layer: exact hit counts,
+    the CoW'd boundary head verified against the donor's device pages
+    and ``page_tokens``, probe/budget mirroring, and the hash-collision
+    fallback degrading to a miss at token granularity too,
+  * the fused-prefill handoff: after a partial hit the residual chunk
+    starts MID-PAGE on the CoW'd head and ``check_writable`` must accept
+    it (exclusively owned, unpublished).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.batch import Batch
+from repro.core.slo import StageKind
+from repro.models import init_params
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.kvcache import PagedKVManager
+
+KEY = jax.random.PRNGKey(0)
+PAGE = 4
+CFG = get_reduced("smollm-135m")
+PARAMS = init_params(KEY, CFG)
+
+MODES = {"off": dict(share_prefix=False, token_level_prefix=False),
+         "page": dict(share_prefix=True, token_level_prefix=False),
+         "token": dict(share_prefix=True, token_level_prefix=True)}
+
+
+def make_engine(**over):
+    defaults = dict(max_slots=6, max_len=128, page_size=PAGE,
+                    total_pages=128)
+    defaults.update(over)
+    return ServingEngine(CFG, PARAMS, EngineConfig(**defaults))
+
+
+def toks(scen: int, *vals) -> list[int]:
+    """Scenario-namespaced token ids (no cross-scenario chain matches)."""
+    base = 1 + scen * 80
+    return [base + v for v in vals]
+
+
+# --------------------- the six paper scenario mixes ---------------------- #
+def _two_share_then_diverge(scen, shared_len, uniq_len, decode):
+    """Two requests over one shared prefix; the second diverges mid-page
+    (shared_len % PAGE != 0 picks the boundary inside a page)."""
+    shared = toks(scen, *range(shared_len))
+    r1 = shared + toks(scen, *range(40, 40 + uniq_len))
+    r2 = shared + toks(scen, *range(60, 60 + uniq_len))
+    return [("req", 0, r1), ("prefill", 0, len(r1)), ("decode", 0, decode),
+            ("req", 1, r2), ("prefill", 1, len(r2)), ("decode", 1, decode)]
+
+
+def _summarizer(scen):
+    # long shared document + short unique question, mid-page divergence
+    return _two_share_then_diverge(scen, shared_len=18, uniq_len=4, decode=3)
+
+
+def _coder(scen):
+    # shared file context + divergent edit, short output
+    return _two_share_then_diverge(scen, shared_len=13, uniq_len=6, decode=2)
+
+
+def _chatbot(scen):
+    # shared system prompt + distinct user turns, chunked prefill
+    shared = toks(scen, *range(9))
+    r1 = shared + toks(scen, *range(30, 36))
+    r2 = shared + toks(scen, *range(50, 56))
+    return [("req", 0, r1), ("prefill", 0, 7), ("prefill", 0, len(r1) - 7),
+            ("decode", 0, 4),
+            ("req", 1, r2), ("prefill", 1, len(r2)), ("decode", 1, 4)]
+
+
+def _toolllm(scen):
+    # tool loop: prefill -> decode -> tool-context prefill -> decode; the
+    # second request re-sends the same system prompt with a different
+    # tool result (mid-page divergence in the tool context)
+    sys_p = toks(scen, *range(10))
+    tool1 = toks(scen, *range(20, 27))
+    tool2 = tool1[:3] + toks(scen, *range(70, 74))
+    return [("req", 0, sys_p), ("prefill", 0, len(sys_p)), ("decode", 0, 2),
+            ("extend", 0, tool1), ("prefill", 0, len(tool1)),
+            ("decode", 0, 2),
+            ("req", 1, sys_p[:6] + toks(scen, *range(40, 45))),
+            ("prefill", 1, 11), ("decode", 1, 2),
+            ("extend", 1, tool2), ("prefill", 1, len(tool2)),
+            ("decode", 1, 2)]
+
+
+def _reasoning(scen):
+    # short prompts, longer decode (thinking); divergence after 5 tokens
+    return _two_share_then_diverge(scen, shared_len=5, uniq_len=2, decode=6)
+
+
+def _agent(scen):
+    # multi-stage agent: each request re-sends the previous context and
+    # appends a new stage; the third diverges inside the resent prefix
+    stage1 = toks(scen, *range(11))
+    stage2 = stage1 + toks(scen, *range(20, 26))
+    stage3 = stage2[:14] + toks(scen, *range(60, 66))
+    return [("req", 0, stage1), ("prefill", 0, len(stage1)),
+            ("decode", 0, 2),
+            ("req", 1, stage2), ("prefill", 1, len(stage2)),
+            ("decode", 1, 2),
+            ("req", 2, stage3), ("prefill", 2, len(stage3)),
+            ("decode", 2, 2)]
+
+
+SCENARIOS = {"summarizer": _summarizer, "coder": _coder,
+             "chatbot": _chatbot, "toolllm": _toolllm,
+             "reasoning": _reasoning, "agent": _agent}
+
+
+def _run_program(eng, scen_idx, program):
+    """Drive one scenario's request program on the engine; returns
+    {rid: greedy stream}."""
+    streams: dict[int, list] = {}
+    for step in program:
+        kind, rid_local, arg = step
+        rid = scen_idx * 10 + rid_local
+        if kind == "req":
+            assert eng.add_request(rid, list(arg),
+                                   expected_total=len(arg) + 24)
+            streams.setdefault(rid, [])
+        elif kind == "extend":
+            # tool-loop context arrives after a decode stage, exactly how
+            # ReplicaDriver._sweep feeds the engine
+            ctx = eng.reqs[rid]
+            ctx.pending.extend(arg)
+        else:
+            b = Batch()
+            b.add(rid, StageKind.PREFILL if kind == "prefill"
+                  else StageKind.DECODE, arg)
+            streams[rid] += eng.execute(b).get(rid, [])
+    for rid in streams:
+        eng.finish(rid)      # free slot/pages; published pages stay cached
+    return streams
+
+
+def test_scenario_matrix_bit_identical_and_token_hits_exceed_page():
+    """The ISSUE 5 acceptance matrix: per scenario, greedy streams are
+    bit-identical across sharing off / page-granular / token-level, and
+    token-level total hit tokens strictly exceed the page-granular
+    baseline on these mid-page-divergence mixes."""
+    results = {}
+    for mode, flags in MODES.items():
+        eng = make_engine(**flags)
+        streams, hits = {}, {}
+        for si, (name, build) in enumerate(sorted(SCENARIOS.items())):
+            h0 = eng.counters["prefix_hit_tokens"]
+            streams[name] = _run_program(eng, si, build(si))
+            hits[name] = eng.counters["prefix_hit_tokens"] - h0
+        results[mode] = (streams, hits,
+                         eng.counters["prefix_hit_tokens"],
+                         eng.kv.partial_hit_tokens)
+    s_off, s_page, s_tok = (results[m][0] for m in ("off", "page", "token"))
+    for name in SCENARIOS:
+        assert s_off[name] == s_page[name] == s_tok[name], name
+    _, hits_page, total_page, _ = results["page"]
+    _, hits_tok, total_tok, partial_tok = results["token"]
+    assert total_page > 0
+    assert total_tok > total_page, (total_tok, total_page)
+    assert partial_tok == total_tok - total_page
+    for name in SCENARIOS:
+        assert hits_tok[name] >= hits_page[name], name
+
+
+# ---------------------- forced mid-page divergence ----------------------- #
+def _seeded_manager(tokens, **over):
+    kw = dict(total_pages=16, page_size=PAGE, max_seqs=4, max_len=64,
+              share_prefix=True)
+    kw.update(over)
+    kv = PagedKVManager(CFG, **kw)
+    assert kv.admit(1, len(tokens), tokens=tokens)
+    kv.seq_len[kv.seq_of[1]] = len(tokens)
+    kv.register_prefix(1, tokens)
+    return kv
+
+
+def test_mid_page_divergence_exact_hit_and_cow_head_content():
+    """A prompt diverging mid-page hits EXACTLY the verified token head:
+    2 full pages + 3 of 4 boundary tokens -> hit 11 (page-granular: 8).
+    The CoW'd head page is private, unpublished, and its device content
+    equals the donor page (position-identical KV); the donor keeps its
+    ``page_tokens`` publication."""
+    base = list(range(100, 116))                    # 4 full pages
+    div = base[:11] + [7, 8, 9]                     # diverges at token 11
+    kv = _seeded_manager(base)
+    donor = kv.tables[1][2]                         # boundary page (toks 8-12)
+    assert kv.probe_prefix(div) == 11
+    assert kv.admit(2, len(div), tokens=div)
+    assert kv.length(2) == 11                       # exact, not 8
+    assert kv.partial_hit_tokens == 3 and kv.partial_head_copies == 1
+    head = kv.tables[2][2]
+    assert head != donor
+    assert int(kv.refcount[head]) == 1 and head not in kv.page_key
+    assert kv.page_tokens[donor] == tuple(base[8:12])   # donor untouched
+    # device content: the copied head equals the donor page bit-for-bit
+    # in every paged leaf (page axis 1: smollm's attn segment stacks
+    # layers on axis 0)
+    leaves = jax.tree.leaves(kv.pools[0])
+    assert leaves, "expected paged leaves"
+    for leaf in leaves:
+        np.testing.assert_array_equal(np.asarray(leaf[:, head]),
+                                      np.asarray(leaf[:, donor]))
+    # page-granular manager on the same workload: rounded down to 8
+    kv_pg = _seeded_manager(base, token_level=False)
+    assert kv_pg.probe_prefix(div) == 8
+    assert kv_pg.admit(2, len(div), tokens=div)
+    assert kv_pg.length(2) == 8
+
+
+def test_partial_head_picks_longest_verified_candidate():
+    """With several published boundary pages extending one chain, the
+    longest token-verified common head wins."""
+    a = list(range(100, 112))                       # chain A: 3 pages
+    b = a[:8] + [50, 51, 52, 53]                    # same 2-page parent
+    kv = _seeded_manager(a)
+    assert kv.admit(2, len(b), tokens=b)
+    kv.seq_len[kv.seq_of[2]] = len(b)
+    kv.register_prefix(2, b)
+    # two children of the 2-page chain: heads (108,109,110,111) and
+    # (50,51,52,53); a probe matching 3 tokens of the second must pick it
+    probe = a[:8] + [50, 51, 99, 98]
+    assert kv.probe_prefix(probe) == 10
+    assert kv.admit(3, len(probe), tokens=probe)
+    assert kv.length(3) == 10
+
+
+def test_partial_match_budget_and_pool_mirror():
+    """probe_prefix only promises a partial head it can deliver: the CoW
+    copy needs one grabbable page AND one budget page, so a starved pool
+    truncates the probe to the full-page hit."""
+    from repro.serving.kvcache import SharedPageBudget
+    base = list(range(100, 108))                    # 2 pages
+    div = base[:6] + [1, 2]                         # 1 full page + 2 head
+    # ample budget: reviving the cached full-page match costs 1 budget
+    # page and the head copy another — probe promises 4 + 2 = 6
+    budget = SharedPageBudget(2)
+    kv = PagedKVManager(CFG, total_pages=8, page_size=PAGE, max_seqs=2,
+                        max_len=32, share_prefix=True, budget=budget)
+    assert kv.admit(1, len(base), tokens=base)
+    kv.seq_len[kv.seq_of[1]] = len(base)
+    kv.register_prefix(1, base)
+    kv.release(1)                                   # pages retire to cache
+    assert budget.used == 0
+    assert kv.probe_prefix(div) == 6
+    # starved budget: the revival consumes it all, nothing remains for
+    # the head copy -> the probe truncates to the full-page hit, and a
+    # fitting admission delivers exactly that
+    budget2 = SharedPageBudget(1)
+    kv2 = PagedKVManager(CFG, total_pages=8, page_size=PAGE, max_seqs=2,
+                         max_len=32, share_prefix=True, budget=budget2)
+    kv2.budget = None                               # seed without budget cap
+    assert kv2.admit(1, len(base), tokens=base)
+    kv2.seq_len[kv2.seq_of[1]] = len(base)
+    kv2.register_prefix(1, base)
+    kv2.release(1)
+    kv2.budget = budget2
+    probed = kv2.probe_prefix(div)
+    assert probed == 4                              # no budget for the head
+    assert kv2.admit(2, 4, tokens=div)
+    assert kv2.length(2) == probed
+
+
+def test_partial_match_collision_degrades_to_miss(monkeypatch):
+    """Boundary-head candidates are verified token-by-token, so a forced
+    chain-hash collision can only shorten the verified head — never map
+    another prompt's KV.  With every chunk colliding, a foreign prompt
+    still probes 0 and a same-parent divergence still matches only its
+    true common head."""
+    monkeypatch.setattr(PagedKVManager, "_chain",
+                        staticmethod(lambda parent, chunk: 42))
+    a = list(range(100, 108))
+    kv = _seeded_manager(a)
+    # chain A's page 1 collides with page 0's hash and is deduped away —
+    # there IS no published boundary page, so the hit degrades to the
+    # verified full-page prefix (4), exactly like the page-granular
+    # collision test; nothing false is ever served
+    foreign = list(range(200, 208))
+    assert kv.probe_prefix(foreign) == 0            # collision -> miss
+    partial = a[:6] + [1, 2]
+    assert kv.probe_prefix(partial) == 4            # no phantom head
+    assert kv.admit(2, 8, tokens=foreign)
+    assert kv.length(2) == 0
+    kv.release(2)
+    # a second root chain tries to publish, but its depth-0 hash collides
+    # with a's published page and dedup drops it: b's probes degrade to a
+    # FULL miss (its pages never entered the index, and a's candidate
+    # fails token verification) while a's own mid-page probes still match
+    # their true verified head via the children bucket
+    b = list(range(300, 308))
+    assert kv.admit(3, len(b), tokens=b)
+    kv.seq_len[kv.seq_of[3]] = len(b)
+    kv.register_prefix(3, b)
+    assert kv.probe_prefix(b[:3] + [9, 8, 7, 6, 5]) == 0
+    probe_a = a[:2] + [9, 8, 7, 6, 5, 4]
+    assert kv.probe_prefix(probe_a) == 2            # a's true head, len 2
+
+
+# ---------------------- fused-prefill handoff (mid-page) ----------------- #
+def test_check_writable_accepts_mid_page_start_on_cow_head():
+    """After a token-level hit the residual prefill chunk starts mid-page
+    on the CoW'd head; the write-set handoff must pass (exclusively
+    owned, unpublished) and cover exactly the residual pages."""
+    base = list(range(100, 116))
+    div = base[:11] + [7, 8, 9]
+    kv = _seeded_manager(base, total_pages=32)
+    assert kv.admit(2, len(div), tokens=div)
+    hit = kv.length(2)
+    assert hit == 11 and hit % PAGE != 0            # mid-page start
+    residual = len(div) - hit
+    kv.ensure_writable(2, hit, residual)
+    pages = kv.check_writable(2, hit, residual)
+    assert pages == kv.tables[2][hit // PAGE:
+                                 (len(div) - 1) // PAGE + 1]
+    assert all(int(kv.refcount[p]) == 1 and p not in kv.page_key
+               for p in pages)
+
+
+def test_engine_partial_hit_prefills_residual_only():
+    """Engine-level: the second request's prefill consumes only the
+    residual after the token-exact hit, and the emitted stream matches
+    the unshared engine exactly."""
+    rng = np.random.default_rng(17)
+    base = rng.integers(1, CFG.vocab, 19).tolist()
+    div = base[:14] + rng.integers(1, CFG.vocab, 5).tolist()
+    out = {}
+    for mode, flags in MODES.items():
+        eng = make_engine(**flags)
+        streams = {}
+        for rid, prompt in ((1, base), (2, div)):
+            assert eng.add_request(rid, prompt, expected_total=40)
+            b = Batch()
+            b.add(rid, StageKind.PREFILL, len(prompt))
+            streams[rid] = eng.execute(b).get(rid, [])
+            b = Batch()
+            b.add(rid, StageKind.DECODE, 3)
+            streams[rid] += eng.execute(b).get(rid, [])
+        out[mode] = (streams, eng.counters["prefix_hit_tokens"],
+                     eng.last_hit_fresh)
+    assert out["off"][0] == out["page"][0] == out["token"][0]
+    assert out["page"][1] == 12                     # 3 full pages
+    assert out["token"][1] == 14                    # + 2 boundary tokens
+    assert out["token"][2] == 14                    # admission progress
+
+
+def test_ssm_models_keep_token_level_off():
+    """Sharing (and with it token-level matching) stays disabled for
+    SSM-bearing models regardless of the flag."""
+    cfg = get_reduced("mamba2-2.7b")
+    kv = PagedKVManager(cfg, total_pages=8, page_size=PAGE, max_seqs=2,
+                        max_len=32, share_prefix=True, token_level=True)
+    assert not kv.share_prefix
+    assert kv.probe_prefix(list(range(10))) == 0
+
+
+def test_engine_config_env_matrix_defaults(monkeypatch):
+    """The CI sharing matrix flips EngineConfig DEFAULTS from the
+    environment; explicit settings always win."""
+    monkeypatch.setenv("REPRO_SHARE_PREFIX", "0")
+    monkeypatch.setenv("REPRO_TOKEN_LEVEL_PREFIX", "off")
+    assert EngineConfig().share_prefix is False
+    assert EngineConfig().token_level_prefix is False
+    assert EngineConfig(share_prefix=True).share_prefix is True
+    monkeypatch.setenv("REPRO_SHARE_PREFIX", "1")
+    assert EngineConfig().share_prefix is True
+    ecfg = dataclasses.replace(EngineConfig(), token_level_prefix=True)
+    assert ecfg.token_level_prefix is True
