@@ -68,6 +68,28 @@ def run(scenarios=("chatbot", "coder", "summarizer"),
     return results
 
 
+def run_smoke(duration: float = 15.0, iters: int = 5):
+    """Adaptive-speculation smoke gate (CI nightly): on ``live-mixed`` —
+    sub-floor-TPOT completions sharing the pool with relaxed chat — the
+    SLO-planned per-class draft lengths must beat BOTH a fixed draft
+    length (vllm-spec, sl=3 for every tier: loose-tier drafts are pure
+    token waste) and speculation-off (the sub-floor tier is unservable
+    autoregressively, so AR capacity is 0)."""
+    caps = {}
+    for sysname in ("ours", "ours-ar", "vllm-spec"):
+        cap, dt = timed(find_capacity, system_factory(sysname),
+                        "live-mixed", duration=duration, iters=iters)
+        caps[sysname] = cap
+        emit(f"capacity_smoke_live-mixed_{sysname}", dt * 1e6,
+             f"req/s/chip={cap:.2f}")
+    assert caps["ours"] > caps["vllm-spec"] > 0, caps
+    assert caps["ours-ar"] == 0.0, caps
+    emit("capacity_smoke_adaptive_gain", 0.0,
+         f"x_vs_fixed_sl={caps['ours'] / caps['vllm-spec']:.2f};"
+         f"spec_off=unservable")
+    return caps
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenarios", nargs="+",
@@ -75,8 +97,13 @@ if __name__ == "__main__":
                              "reasoning"])
     ap.add_argument("--duration", type=float, default=45.0)
     ap.add_argument("--iters", type=int, default=6)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast adaptive-speculation capacity gate")
     args = ap.parse_args()
-    run(tuple(args.scenarios), duration=args.duration, iters=args.iters)
+    if args.smoke:
+        run_smoke()
+    else:
+        run(tuple(args.scenarios), duration=args.duration, iters=args.iters)
 
 
 def run_strict(scenarios=("chatbot",), duration=45.0, iters=7):

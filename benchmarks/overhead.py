@@ -101,7 +101,64 @@ def run_prefill_fusion(prompt_len: int = 32, chunk: int = 16):
     assert reduction >= 2.0, ops
 
 
+def run_verify_fusion(sl: int = 3, rounds: int = 4):
+    """Verify-path op audit for the fused multi-token verify step: the
+    target's verify of ``sl`` drafts + 1 bonus token IS a chunked prefill
+    of the drafted positions, so the fused kernel serves it with ONE op
+    per attention layer where the gather reference pays three (two
+    ``paged_write`` scatters + one gathered-slab attention).  Both
+    backends produce bit-identical accepted streams (greedy acceptance
+    is exact); only the traced op count differs."""
+    import dataclasses
+
+    import jax
+
+    import repro.models.attention as attention
+    from repro.configs import get_reduced
+    from repro.core.batch import Batch
+    from repro.core.slo import StageKind
+    from repro.models import init_params
+    from repro.serving.engine import EngineConfig, ServingEngine
+
+    cfg = get_reduced("smollm-135m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    dcfg = dataclasses.replace(cfg, name="draft", n_layers=1,
+                               block_pattern=("attn",))
+    dparams = init_params(jax.random.PRNGKey(7), dcfg)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, 24).tolist()
+    ops, streams = {}, {}
+    for impl in ("gather", "fused"):
+        attention.PAGED_VERIFY_IMPL = impl
+        try:
+            eng = ServingEngine(cfg, params,
+                                EngineConfig(max_slots=4, max_len=128,
+                                             total_pages=64),
+                                draft=(dcfg, dparams))
+            eng.add_request(1, prompt, expected_total=96)
+            b = Batch()
+            b.add(1, StageKind.PREFILL, len(prompt))
+            out = eng.execute(b).get(1, [])
+            for _ in range(rounds):
+                b = Batch(spec_step=sl)
+                b.add(1, StageKind.DECODE, sl + 1)
+                out += eng.execute(b).get(1, [])
+            c = eng.counters
+            ops[impl] = (c["verify_scatter_ops"] + c["verify_attn_ops"]
+                         + c["verify_fused_ops"])
+            streams[impl] = out
+        finally:
+            attention.PAGED_VERIFY_IMPL = "auto"
+    assert streams["gather"] == streams["fused"], "verify backends diverge"
+    reduction = ops["gather"] / max(ops["fused"], 1)
+    emit("verify_fused_op_reduction", reduction,
+         f"gather_ops={ops['gather']};fused_ops={ops['fused']};"
+         f"verifies={rounds};sl={sl};target>=2x")
+    assert reduction >= 2.0, ops
+
+
 if __name__ == "__main__":
     run()
     run_engine_device_calls()
     run_prefill_fusion()
+    run_verify_fusion()

@@ -19,14 +19,26 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-from typing import Optional
+import os
+from typing import Optional, Sequence
 
 from repro.core.batch import Batch
 from repro.core.dp_scheduler import Candidate, dp_admission
 from repro.core.perf_model import PerfModel
 from repro.core.request import Request
 from repro.core.slo import StageKind
-from repro.core.spec_planner import acc_len, plan_speculation, strengthen_slo
+from repro.core.spec_planner import (AcceptanceEstimator, acc_len,
+                                     plan_speculation, strengthen_slo)
+
+
+def _default_spec_alpha() -> Optional[float]:
+    """REPRO_SPEC_DECODE=1 flips the fleet-wide default to speculation ON
+    with the standard 0.7 acceptance prior (CI spec matrix leg, mirroring
+    REPRO_SHARE_PREFIX); unset/0 keeps autoregressive planning."""
+    if os.environ.get("REPRO_SPEC_DECODE", "").lower() in ("1", "true",
+                                                           "yes", "on"):
+        return 0.7
+    return None
 
 
 @dataclasses.dataclass
@@ -36,7 +48,11 @@ class SchedulerConfig:
     max_new_per_plan: int = 12       # DP tractability cap; overflow deferred
     max_planned_batches: int = 64    # replan at least this often
     prefill_only_latency: float = 0.05   # batch latency target w/o decodes
-    spec_alpha: Optional[float] = None   # draft acceptance rate; None = AR
+    # draft-acceptance prior; None = AR.  When an AcceptanceEstimator is
+    # attached to the scheduler this is only the warmup prior — planning
+    # uses the per-SLO-class online estimates.
+    spec_alpha: Optional[float] = dataclasses.field(
+        default_factory=_default_spec_alpha)
     spec_margin: float = 0.85            # TPOT headroom vs. emission variance
     min_batch_latency: float = 0.01      # floor when chasing tight TTFTs
     # real engines emit the first output token AT prefill completion, so
@@ -70,6 +86,23 @@ class SLOsServeScheduler:
     def __init__(self, perf: PerfModel, cfg: SchedulerConfig = None):
         self.perf = perf
         self.cfg = cfg or SchedulerConfig()
+        # per-SLO-class acceptance EWMA (keyed by tier TPOT value).  The
+        # frontend attaches one and feeds it observed verify outcomes;
+        # until then the cfg.spec_alpha prior is used for every tier.
+        self.estimator: Optional[AcceptanceEstimator] = None
+        # last plan's speculation decision, for observability/demos:
+        # (tiers, spec_lens or None, per-tier alphas used)
+        self.last_spec_plan: Optional[tuple] = None
+
+    def _alphas(self, tiers: Sequence[float]):
+        """Per-tier acceptance rates for planning, or None if spec is off
+        (speculation is enabled by the cfg.spec_alpha prior; the attached
+        estimator only refines the value per SLO class)."""
+        if self.cfg.spec_alpha is None:
+            return None
+        if self.estimator is not None:
+            return self.estimator.alphas(list(tiers))
+        return self.cfg.spec_alpha
 
     # ------------------------------------------------------------------ #
     def zero_load_time(self, prefill_len: int) -> float:
@@ -169,21 +202,39 @@ class SLOsServeScheduler:
                 m=max(self.mem_units(r) - live_prefix.get(r.rid, 0), 1),
                 tier=self._tier_of(tiers, r), value=r.value, forced=False))
 
-        # --- speculative decoding plan (per-tier speculation lengths)
+        # --- speculative decoding plan (per-tier speculation lengths),
+        # co-optimized with admission: the spec planner proposes the
+        # draft-length vector that maximizes leftover prefill throughput
+        # at the current per-class acceptance estimates, then the DP is
+        # solved under BOTH the speculative and the autoregressive fluid
+        # bound (pb_star_fluid(spec_lens=...)) and the higher-value
+        # admission wins — speculation is only adopted when the tokens it
+        # reclaims actually admit at least as much SLO-weighted work.
+        alphas = self._alphas(tiers)
         spec_lens = None
-        if cfg.spec_alpha is not None:
+        spec_cands: list = [None]
+        if alphas is not None:
             est_counts = list(run_counts)
             for c in cands:
                 if c.tier >= 0:
                     est_counts[c.tier] += 1
             m_tiers = [t * cfg.spec_margin for t in tiers]
-            sp = plan_speculation(est_counts, m_tiers, self.perf,
-                                  cfg.spec_alpha)
+            sp = plan_speculation(est_counts, m_tiers, self.perf, alphas)
             if sp is not None and any(sp.spec_lens):
-                spec_lens = sp.spec_lens
+                spec_cands.append(sp.spec_lens)
 
-        res = dp_admission(cands, tiers, run_counts, mem_free, self.perf,
-                           cfg.horizon, spec_lens=spec_lens)
+        res = None
+        best_key = None
+        for sls in spec_cands:
+            r_ = dp_admission(cands, tiers, run_counts, mem_free, self.perf,
+                              cfg.horizon, spec_lens=sls)
+            key = (not r_.relaxed, r_.best_value)
+            # ties go to speculation (iterated last): same admitted value
+            # at longer drafts means more prefill budget per batch
+            if best_key is None or key >= best_key:
+                res, best_key, spec_lens = r_, key, sls
+        self.last_spec_plan = (tuple(tiers), spec_lens,
+                               None if alphas is None else alphas)
 
         admitted = [c.req for c in res.accepted]
         declined = [c.req for c in res.declined if not c.forced]
@@ -228,6 +279,10 @@ class SLOsServeScheduler:
         """
         cfg = self.cfg
         perf = self.perf
+        alphas = self._alphas(tiers)
+        alpha_of = ([float(alphas)] * len(tiers)
+                    if isinstance(alphas, (int, float))
+                    else list(alphas or []))
         prefills = sorted(
             [{"req": c.req, "ddl": c.ddl, "rem": c.p} for c in accepted_cands],
             key=lambda d: d["ddl"])
@@ -251,10 +306,9 @@ class SLOsServeScheduler:
                 counts = [0] * len(tiers)
                 for j in active:
                     counts[j.tier] += 1
-                if cfg.spec_alpha is not None:
+                if alphas is not None:
                     m_tiers = [x * cfg.spec_margin for x in tiers]
-                    sp = plan_speculation(counts, m_tiers, perf,
-                                          cfg.spec_alpha)
+                    sp = plan_speculation(counts, m_tiers, perf, alphas)
                     if sp is not None and any(sp.spec_lens) and sp.batch_time > 0:
                         spec_lens = sp.spec_lens
                         t0 = sp.batch_time
@@ -264,6 +318,13 @@ class SLOsServeScheduler:
                     t0 = min(j.tpot for j in active)
             else:
                 t0 = cfg.prefill_only_latency
+            # no batch can run faster than one forward pass: a fallen-
+            # behind decode whose strengthened TPOT dips below the
+            # weight-read floor (§3.2.3 under acceptance collapse) would
+            # otherwise demand a zero-budget batch and livelock the
+            # replica — serve it at the floor, best effort
+            floor = max(perf.batch_time(1) * 1.05, cfg.min_batch_latency)
+            t0 = max(t0, floor)
             # a pending prefill with a deadline inside this batch window
             # must complete at batch END <= its deadline: shrink the batch
             # (shorter-than-TPOT batches are always SLO-safe) — but never
@@ -271,8 +332,6 @@ class SLOsServeScheduler:
             next_ddl = min((p["ddl"] for p in prefills if p["rem"] > 0),
                            default=math.inf)
             if next_ddl < t + t0:
-                floor = max(perf.batch_time(1) * 1.05,
-                            cfg.min_batch_latency)
                 t0 = max(next_ddl - t, floor)
             end = t + t0
             spec_step = max(spec_lens) if spec_lens else 0
@@ -294,8 +353,9 @@ class SLOsServeScheduler:
                 b.add(j.req.rid, StageKind.DECODE, take)
                 budget -= take
                 # expected progress: a verify of (take-1) drafts emits
-                # Acc(take-1) tokens in expectation (§3.2.3 / App. D)
-                emitted = (acc_len(take - 1, cfg.spec_alpha)
+                # Acc(take-1) tokens in expectation (§3.2.3 / App. D),
+                # at the job's own class acceptance estimate
+                emitted = (acc_len(take - 1, alpha_of[j.tier])
                            if spec_lens else float(take))
                 j.remaining -= emitted
                 if j.remaining > 0:

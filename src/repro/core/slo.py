@@ -23,6 +23,9 @@ TIGHT_TTFT_SLOWDOWN = 3.0
 LOOSE_TTFT_SLOWDOWN = 5.0
 TIGHT_TPOT = 0.050  # seconds / token
 LOOSE_TPOT = 0.100
+# Below the single-batch weight-read floor of the reference 7B perf model
+# (~11.5 ms at batch size 1): only speculative decoding can hold this pace (§3.2.3, Fig. 6).
+SPEC_TPOT = 0.008
 
 # TPOT is measured every TPOT_WINDOW tokens (paper §6, "we measure the TPOT
 # every 10 tokens" — required for speculative decoding which emits bursts).

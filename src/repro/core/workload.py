@@ -17,7 +17,7 @@ import numpy as np
 from repro.core.request import Request
 from repro.core.slo import (StageSpec, prefill_slo, decode_slo,
                             TIGHT_TTFT_SLOWDOWN, LOOSE_TTFT_SLOWDOWN,
-                            TIGHT_TPOT, LOOSE_TPOT)
+                            TIGHT_TPOT, LOOSE_TPOT, SPEC_TPOT)
 
 
 # --------------------------- length sampling --------------------------- #
@@ -103,6 +103,18 @@ def _coder(rid, t, rng) -> Request:
         StageSpec(decode_slo(TIGHT_TPOT), int(d["output"].sample(rng)))])
 
 
+def _live_coder(rid, t, rng) -> Request:
+    """Interactive completion at sub-floor TPOT: coder lengths, but the
+    decode SLO sits below the single-batch weight-read floor, so the pace
+    is only attainable speculatively (§3.2.3, Fig. 6) — the scenario that
+    separates SLO-planned draft lengths from both fixed-``sl`` and
+    AR-only serving."""
+    d = TABLE4["coder"]
+    return Request(rid, t, stages=[
+        StageSpec(prefill_slo(LOOSE_TTFT_SLOWDOWN), int(d["prompt"].sample(rng))),
+        StageSpec(decode_slo(SPEC_TPOT), int(d["output"].sample(rng)))])
+
+
 def _summarizer(rid, t, rng) -> Request:
     d = TABLE4["summarizer"]
     return Request(rid, t, stages=[
@@ -139,9 +151,19 @@ def _mixed(rid, t, rng) -> Request:
     return [_chatbot, _coder, _summarizer][int(rng.integers(0, 3))](rid, t, rng)
 
 
+def _live_mixed(rid, t, rng) -> Request:
+    """Sub-floor completions sharing the pool with relaxed chat: the
+    co-scheduling case where per-SLO-class draft lengths beat one fixed
+    ``sl`` — drafting for the loose tier is pure token waste, while the
+    tight tier cannot live without it."""
+    return [_live_coder, _chatbot][int(rng.integers(0, 2))](rid, t, rng)
+
+
 SCENARIOS = {
     "chatbot":    Scenario("chatbot", bursty=False, build=_chatbot),
     "coder":      Scenario("coder", bursty=True, build=_coder),
+    "live-coder": Scenario("live-coder", bursty=True, build=_live_coder),
+    "live-mixed": Scenario("live-mixed", bursty=False, build=_live_mixed),
     "summarizer": Scenario("summarizer", bursty=False, build=_summarizer),
     "mixed":      Scenario("mixed", bursty=False, build=_mixed),
     # ToolLLM and Reasoning run without a speculative model (paper §6.1).

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_bh
 from repro.kernels.paged_attention import paged_decode_attention
-from repro.kernels.paged_prefill import paged_prefill_attention
+from repro.kernels.paged_prefill import (paged_prefill_attention,
+                                         paged_verify_attention)
 from repro.kernels.ssd_scan import ssd_scan
 
 
@@ -91,6 +92,23 @@ def paged_prefill(q, k_new, v_new, k_pages, v_pages, block_table, pos0,
                                    chunk_len.astype(jnp.int32),
                                    scale=scale, window=window,
                                    interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("scale", "window", "interpret"))
+def paged_verify(q, k_new, v_new, k_pages, v_pages, block_table, pos0,
+                 chunk_len, *, scale: float = None, window: int = None,
+                 interpret: bool = None):
+    """Fused speculative-verify attention: scores the sl+1 verify window
+    ([last emitted] + drafts) as an in-kernel chunk over the paged
+    history — one device op replacing 2 page scatters + a slab attention.
+    Same shapes/returns as :func:`paged_prefill`."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return paged_verify_attention(q, k_new, v_new, k_pages, v_pages,
+                                  block_table.astype(jnp.int32),
+                                  pos0.astype(jnp.int32),
+                                  chunk_len.astype(jnp.int32),
+                                  scale=scale, window=window,
+                                  interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -173,3 +173,28 @@ def paged_prefill_attention(q, k_new, v_new, k_pages, v_pages, block_table,
         input_output_aliases={6: 1, 7: 2},
         interpret=interpret,
     )(block_table, pos0, chunk_len, q, k_new, v_new, k_pages, v_pages)
+
+
+def paged_verify_attention(q, k_new, v_new, k_pages, v_pages, block_table,
+                           pos0, chunk_len, *, scale: float = None,
+                           window: Optional[int] = None,
+                           interpret: bool = True):
+    """Fused multi-token speculative-verify attention.
+
+    The target model scores a verify window of sl+1 tokens — the last
+    emitted token plus the draft's sl proposals — against the paged
+    history.  That is exactly a chunked prefill of length sl+1 starting at
+    pos0 (causal within the window, full attention over the history), so
+    this entry point shares ``_prefill_kernel``: one pallas_call writes
+    the window's KV into pool pages in-kernel and attends in the same
+    pass, where the gather reference issues 2 scatters + a slab
+    attention per layer.  Rejected drafts are rolled back by the caller
+    via block-table truncation (``PagedKVManager.truncate``); any stale
+    KV they left in-page is masked by seq_len on later reads and
+    overwritten by the next verify window.
+
+    Same shapes/contract as :func:`paged_prefill_attention`.
+    """
+    return paged_prefill_attention(
+        q, k_new, v_new, k_pages, v_pages, block_table, pos0, chunk_len,
+        scale=scale, window=window, interpret=interpret)

@@ -44,12 +44,22 @@ PAGED_DECODE_IMPL = "auto"
 # elsewhere; tests force "fused" (interpret=True on CPU) for parity.
 PAGED_PREFILL_IMPL = "auto"
 
+# Multi-token speculative-verify backend: the target model scores the
+# sl+1 verify window ([last emitted] + drafts) as a short chunk over the
+# paged history.  Mathematically this IS a chunked prefill, so "fused"
+# reuses the same in-kernel page-write + paged-history attention pass
+# (kernels/paged_prefill.paged_verify_attention); "gather" is the
+# scatter+slab reference.  Tracked separately from PAGED_PREFILL_IMPL so
+# benchmarks/tests can A/B the verify path on its own.
+PAGED_VERIFY_IMPL = "auto"
+
 # Trace-time op audit: how many paged-KV device ops each traced program
-# contains (page scatters, slab attentions, fused prefill kernels).  The
+# contains (page scatters, slab attentions, fused prefill/verify kernels).  The
 # engine snapshots deltas around its jitted calls — compilation happens
 # once per shape, so fresh traces reveal the per-chunk op count that the
 # fused kernel removes (benchmarks/overhead.py).
-OP_STATS = {"paged_write": 0, "prefill_attn": 0, "fused_prefill": 0}
+OP_STATS = {"paged_write": 0, "prefill_attn": 0, "fused_prefill": 0,
+            "verify_write": 0, "verify_attn": 0, "fused_verify": 0}
 
 
 def _paged_prefill_impl() -> str:
@@ -58,8 +68,15 @@ def _paged_prefill_impl() -> str:
     return PAGED_PREFILL_IMPL
 
 
+def _paged_verify_impl() -> str:
+    if PAGED_VERIFY_IMPL == "auto":
+        return "fused" if jax.default_backend() == "tpu" else "gather"
+    return PAGED_VERIFY_IMPL
+
+
 # ----------------------------- paged KV --------------------------------- #
-def paged_write(pages, vals, block_table, pos0, chunk_len):
+def paged_write(pages, vals, block_table, pos0, chunk_len,
+                op_key: str = "paged_write"):
     """Scatter per-token vectors of a chunk into KV pages.
 
     pages: (P, page, ...); vals: (B, S, ...); block_table: (B, max_pages);
@@ -67,8 +84,9 @@ def paged_write(pages, vals, block_table, pos0, chunk_len):
     position pos0[b]+i inside the lane's block table; positions at or past
     chunk_len[b] (padding / inactive lanes) are dropped, so one call can
     serve bucketed prefill chunks and masked decode lanes alike.
+    ``op_key`` picks the OP_STATS counter (verify audits separately).
     """
-    OP_STATS["paged_write"] += 1
+    OP_STATS[op_key] += 1
     P, page = pages.shape[:2]
     B, S = vals.shape[:2]
     tail = pages.shape[2:]
@@ -225,7 +243,8 @@ def sdpa_chunked(q, k, v, *, pos0, kv_len, window=None, causal=True,
 # --------------------------- self-attention ----------------------------- #
 def attn_forward(p, x, cfg: ModelConfig, *, positions, cache=None,
                  pos0=None, layer_window: Optional[int] = None,
-                 causal: bool = True, block_tables=None, chunk_len=None):
+                 causal: bool = True, block_tables=None, chunk_len=None,
+                 verify: bool = False):
     """Returns (out, new_cache).
 
     cache: None (full-causal, no cache kept), dict(k, v) fixed buffers, or
@@ -233,6 +252,9 @@ def attn_forward(p, x, cfg: ModelConfig, *, positions, cache=None,
     pos0: (B,) write offsets into the cache (chunked prefill / decode).
     chunk_len: (B,) true (unpadded) chunk lengths for paged writes.
     causal=False: bidirectional (encoder) attention, no cache.
+    verify=True: the multi-token chunk is a speculative verify window —
+    same math as chunked prefill, but dispatched via PAGED_VERIFY_IMPL
+    and audited under the verify OP_STATS keys.
     """
     B, Sq, _ = x.shape
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
@@ -269,27 +291,37 @@ def attn_forward(p, x, cfg: ModelConfig, *, positions, cache=None,
     if "k_pages" in cache:
         if chunk_len is None:
             chunk_len = jnp.full((B,), Sq, jnp.int32)
-        if Sq > 1 and _paged_prefill_impl() == "fused":
-            # fused chunked prefill: the kernel scatters the chunk's KV
-            # into pool pages in-kernel AND attends over the paged
-            # history in the same pass — one device op where the gather
-            # reference below issues three (2 scatters + attention).
+        impl = _paged_verify_impl() if verify else _paged_prefill_impl()
+        if Sq > 1 and impl == "fused":
+            # fused chunked prefill / spec verify: the kernel scatters the
+            # chunk's KV into pool pages in-kernel AND attends over the
+            # paged history in the same pass — one device op where the
+            # gather reference below issues three (2 scatters + attention).
             # The engine's CoW barrier ran over [pos0, pos0+chunk_len)
             # before this call, so every written page is exclusive.
             from repro.kernels import ops
-            OP_STATS["fused_prefill"] += 1
-            out, kp, vp = ops.paged_prefill(
-                q, k, v, cache["k_pages"], cache["v_pages"], block_tables,
-                pos0, chunk_len, window=window)
+            if verify:
+                OP_STATS["fused_verify"] += 1
+                out, kp, vp = ops.paged_verify(
+                    q, k, v, cache["k_pages"], cache["v_pages"],
+                    block_tables, pos0, chunk_len, window=window)
+            else:
+                OP_STATS["fused_prefill"] += 1
+                out, kp, vp = ops.paged_prefill(
+                    q, k, v, cache["k_pages"], cache["v_pages"],
+                    block_tables, pos0, chunk_len, window=window)
             return out.astype(q.dtype), {"k_pages": kp, "v_pages": vp}
-        kp = paged_write(cache["k_pages"], k, block_tables, pos0, chunk_len)
-        vp = paged_write(cache["v_pages"], v, block_tables, pos0, chunk_len)
+        wkey = "verify_write" if verify and Sq > 1 else "paged_write"
+        kp = paged_write(cache["k_pages"], k, block_tables, pos0, chunk_len,
+                         op_key=wkey)
+        vp = paged_write(cache["v_pages"], v, block_tables, pos0, chunk_len,
+                         op_key=wkey)
         new_cache = {"k_pages": kp, "v_pages": vp}
         kv_len = pos0 + Sq
         if Sq == 1:
             return paged_decode_attention(q, kp, vp, block_tables, kv_len,
                                           window=window), new_cache
-        OP_STATS["prefill_attn"] += 1
+        OP_STATS["verify_attn" if verify else "prefill_attn"] += 1
         ck = paged_gather(kp, block_tables).astype(q.dtype)
         cv = paged_gather(vp, block_tables).astype(q.dtype)
         mask = causal_mask(B, Sq, ck.shape[1], pos0, kv_len, window)

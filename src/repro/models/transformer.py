@@ -58,7 +58,7 @@ def init_block(key, kind: str, cfg: ModelConfig, dtype=jnp.float32):
 
 def block_forward(p, kind: str, cfg: ModelConfig, x, *, positions,
                   cache=None, pos0=None, enc_kv=None, moe_cf=None,
-                  block_tables=None, chunk_len=None):
+                  block_tables=None, chunk_len=None, verify=False):
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     if kind == "ssm":
@@ -83,7 +83,7 @@ def block_forward(p, kind: str, cfg: ModelConfig, x, *, positions,
         ctx, new_self = attn_forward(p["attn"], h, cfg, positions=positions,
                                      cache=self_cache, pos0=pos0,
                                      block_tables=block_tables,
-                                     chunk_len=chunk_len)
+                                     chunk_len=chunk_len, verify=verify)
         y = attn_output(p["attn"], ctx)
     x = x + y.astype(x.dtype)
     if kind == "cross_attn":
@@ -229,7 +229,7 @@ def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
 # ---------------------------- full forward ----------------------------- #
 def model_forward(params, cfg: ModelConfig, tokens_or_embeds, *,
                   cache=None, pos0=None, enc_states=None, moe_cf=None,
-                  block_tables=None, chunk_len=None):
+                  block_tables=None, chunk_len=None, verify=False):
     """Returns (hidden (B,S,D), new_cache, aux_loss).
 
     block_tables: (B, max_pages) per-lane page tables when ``cache`` holds
@@ -262,7 +262,8 @@ def model_forward(params, cfg: ModelConfig, tokens_or_embeds, *,
             x, c_new, aux = block_forward(
                 p, "shared_attn", cfg, x, positions=positions,
                 cache=seg_c, pos0=pos0_arr, enc_kv=None, moe_cf=moe_cf,
-                block_tables=block_tables, chunk_len=chunk_len)
+                block_tables=block_tables, chunk_len=chunk_len,
+                verify=verify)
             aux_total += aux
             if cache is not None:
                 new_caches.append(c_new)
@@ -277,7 +278,8 @@ def model_forward(params, cfg: ModelConfig, tokens_or_embeds, *,
             x, c_new, aux = block_forward(
                 p, kind, cfg, x, positions=positions, cache=seg_c,
                 pos0=pos0_arr, enc_kv=enc_kv, moe_cf=moe_cf,
-                block_tables=block_tables, chunk_len=chunk_len)
+                block_tables=block_tables, chunk_len=chunk_len,
+                verify=verify)
             aux_total += aux
             if cache is not None:
                 new_caches.append(c_new)
@@ -291,7 +293,8 @@ def model_forward(params, cfg: ModelConfig, tokens_or_embeds, *,
                 xx, c_new, aux = block_forward(
                     p_l, kind, cfg, xx, positions=positions, cache=c_l,
                     pos0=pos0_arr, enc_kv=ekv, moe_cf=moe_cf,
-                    block_tables=block_tables, chunk_len=chunk_len)
+                    block_tables=block_tables, chunk_len=chunk_len,
+                    verify=verify)
                 return xx, (c_new, aux)
             if cfg.remat and cache is None:
                 # checkpoint each layer: backward recomputes the block

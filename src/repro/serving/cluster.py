@@ -53,6 +53,8 @@ class ClusterStats:
     prefix_hit_tokens: int = 0   # prompt tokens served from shared pages
     partial_hit_tokens: int = 0  # of which: token-level boundary-head hits
     affinity_routed: int = 0     # first probes placed by prefix affinity
+    spec_drafted_tokens: int = 0   # draft proposals verified by targets
+    spec_accepted_tokens: int = 0  # of which: accepted (EWMA feed)
 
 
 @dataclasses.dataclass
@@ -88,16 +90,26 @@ class ClusterFrontend:
               replica_pages: int = None, page_size: int = 16,
               max_slots: int = 8, max_len: int = 256, dtype=jnp.float32,
               seed: int = 0, draft: Optional[tuple] = None,
+              spec_alpha: Optional[float] = None,
               share_prefix: bool = True,
               token_level_prefix: bool = True) -> "ClusterFrontend":
         """Carve ``total_pages`` (one shared budget) into per-replica paged
         KV pools and stand up N real engines over shared ``params``.
         ``replica_pages`` defaults to an even split; setting it higher lets
         an idle-neighbor replica borrow budget (its physical pool exceeds
-        its fair share, the SharedPageBudget caps the aggregate)."""
+        its fair share, the SharedPageBudget caps the aggregate).
+
+        ``draft=(draft_cfg, draft_params)`` arms each replica's
+        SpecDecoder; ``spec_alpha`` (defaulting to 0.7 when a draft is
+        supplied) seeds the per-replica schedulers' acceptance prior so
+        their plans actually carry speculative draft lengths — each
+        ReplicaDriver then attaches a per-SLO-class EWMA that adapts the
+        plan to observed acceptance."""
         budget = SharedPageBudget(total_pages)
         if replica_pages is None:
             replica_pages = max(1, total_pages // n_replicas)
+        if spec_alpha is None and draft is not None:
+            spec_alpha = 0.7
         drivers = []
         for i in range(n_replicas):
             eng = ServingEngine(
@@ -108,8 +120,12 @@ class ClusterFrontend:
                              share_prefix=share_prefix,
                              token_level_prefix=token_level_prefix),
                 draft=draft, kv_budget=budget)
-            cfg = sched_cfg or SchedulerConfig(
-                page_size=page_size, prefill_emits_first_token=True)
+            kw = dict(page_size=page_size, prefill_emits_first_token=True)
+            if spec_alpha is not None:
+                # only override when armed: passing None would defeat the
+                # REPRO_SPEC_DECODE env default (dataclass default_factory)
+                kw["spec_alpha"] = spec_alpha
+            cfg = sched_cfg or SchedulerConfig(**kw)
             drivers.append(ReplicaDriver(eng, SLOsServeScheduler(perf, cfg),
                                          idx=i, seed=seed + i))
         cluster = cls(drivers, policy=policy, seed=seed)
@@ -143,6 +159,9 @@ class ClusterFrontend:
             s.preempted += d.engine.counters["preemptions"]
             s.prefix_hit_tokens += d.engine.counters["prefix_hit_tokens"]
             s.partial_hit_tokens += d.engine.kv.partial_hit_tokens
+            s.spec_drafted_tokens += d.engine.counters["spec_drafted_tokens"]
+            s.spec_accepted_tokens += (
+                d.engine.counters["spec_accepted_tokens"])
         return s
 
     # ----------------------------- routing ----------------------------- #

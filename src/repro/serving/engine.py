@@ -140,7 +140,15 @@ class ServingEngine:
                          # compilations add 0): the fused kernel turns
                          # 2 scatters + 1 attention per layer into one op
                          "prefill_scatter_ops": 0, "prefill_attn_ops": 0,
-                         "prefill_fused_ops": 0}
+                         "prefill_fused_ops": 0,
+                         # same audit for freshly traced VERIFY programs
+                         # (spec-decode multi-token target pass)
+                         "verify_scatter_ops": 0, "verify_attn_ops": 0,
+                         "verify_fused_ops": 0,
+                         # speculation outcome totals feeding the per-class
+                         # acceptance EWMA (core.spec_planner)
+                         "spec_accepted_tokens": 0,
+                         "spec_drafted_tokens": 0}
         # fresh request-level progress granted by the last admission's
         # prefix hit (hit tokens beyond preemption replay) — the driver
         # advances the request by this right after add/restore/readmit
@@ -150,6 +158,10 @@ class ServingEngine:
         # prefill progress (recompute prefill after preemption is engine
         # work, not request progress)
         self.last_prefill_progress: dict[int, int] = {}
+        # (accepted, drafted) per rid from the last execute() call's verify
+        # steps — the frontend feeds these into its per-SLO-class
+        # AcceptanceEstimator after each batch
+        self.last_spec_stats: dict[int, tuple[int, int]] = {}
         # speculative decoding: (draft_cfg, draft_params)
         self.spec = None
         if draft is not None:
@@ -182,7 +194,7 @@ class ServingEngine:
         h, cache, _ = model_forward(params, self.cfg, tokens, cache=cache,
                                     pos0=pos0, enc_states=enc_states,
                                     moe_cf=self._moe_cf, block_tables=bt,
-                                    chunk_len=true_len)
+                                    chunk_len=true_len, verify=True)
         logits = logits_fn(params, self.cfg, h)
         return jnp.argmax(logits[0], axis=-1).astype(jnp.int32), cache
 
@@ -388,6 +400,7 @@ class ServingEngine:
         step budget, exactly as without the callback."""
         emitted: dict[int, list] = {}
         self.last_prefill_progress = {}
+        self.last_spec_stats = {}
         prefills = []
         decode_rids = []
         for e in batch.entries:

@@ -29,6 +29,7 @@ from repro.core.batch import Batch
 from repro.core.request import Request, RequestState
 from repro.core.scheduler import SLOsServeScheduler
 from repro.core.slo import StageKind
+from repro.core.spec_planner import AcceptanceEstimator
 from repro.serving.engine import ServingEngine
 
 
@@ -71,6 +72,23 @@ class ReplicaDriver:
         self.encs: dict[int, object] = {}
         self.stats = FrontendStats()
         self.preempted_rids: set[int] = set()
+        # online per-SLO-class acceptance estimation: when the scheduler
+        # plans speculation (cfg.spec_alpha prior set), attach an EWMA
+        # estimator and feed it each verify's accepted/drafted outcome so
+        # the planned draft lengths track the observed acceptance per
+        # TPOT class (§3.2.3; SpecServe drift adaptation).  A draftless
+        # engine cannot speculate: disarm the planner (engine truth wins
+        # over the REPRO_SPEC_DECODE config default) — otherwise planned
+        # sl+1 decode allocations run autoregressively and overshoot the
+        # per-stage token counts the plan promised.
+        if engine.spec is None:
+            if scheduler.cfg.spec_alpha is not None:
+                scheduler.cfg = dataclasses.replace(
+                    scheduler.cfg, spec_alpha=None)
+        elif scheduler.cfg.spec_alpha is not None \
+                and scheduler.estimator is None:
+            scheduler.estimator = AcceptanceEstimator(
+                prior=scheduler.cfg.spec_alpha)
 
     # ------------------------------ intake ----------------------------- #
     def enqueue(self, req: Request, prompt: Optional[list] = None,
@@ -202,6 +220,16 @@ class ReplicaDriver:
                         and r.in_prefill:      # preemption doesn't count)
                     r.advance(min(prog.get(e.rid, 0),
                                   r.remaining_in_stage), t)
+            est = self.sched.estimator
+            if est is not None:
+                # fold this batch's verify outcomes into the per-SLO-class
+                # acceptance EWMA (keyed by the request's tightest TPOT,
+                # the value the planner tiers on)
+                for rid, (acc, drafted) in \
+                        self.engine.last_spec_stats.items():
+                    r = by_rid.get(rid)
+                    if r is not None and drafted > 0:
+                        est.observe(r.tightest_tpot(), acc, drafted)
             for rid, toks in out.items():
                 self.stats.tokens_out += len(toks)
                 if toks and rid in self.streams:

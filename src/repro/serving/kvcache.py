@@ -87,7 +87,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
-from repro.models.transformer import init_paged_cache
+from repro.models.transformer import MLA_KINDS, init_paged_cache
 
 
 def _copy_bucket(n: int, buckets=(1, 2, 4, 8)) -> int:
@@ -117,6 +117,29 @@ def _copy_pages_prog(pools, axes, si, di):
             return leaf.at[:, di].set(leaf[:, si])
         out.append(jax.tree.map(cp, pool))
     return out
+
+
+def kv_page_bytes(cfg: ModelConfig, page_size: int = 16,
+                  dtype=jnp.float32) -> int:
+    """HBM bytes one KV page costs for ``cfg``, summed over all layers.
+
+    This is what a page *physically* occupies, so two models sharing one
+    ``SharedPageBudget`` (e.g. a target and its draft) can be charged in
+    comparable units: a draft page is cheaper than a target page by the
+    ratio of their per-page bytes.  SSM lane state is not paged and
+    contributes nothing.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    total = 0
+    for kind, n in cfg.segments():
+        if kind == "ssm":
+            continue
+        if kind in MLA_KINDS:
+            per_tok = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+        else:   # attention: K and V planes
+            per_tok = 2 * cfg.n_kv_heads * cfg.head_dim
+        total += n * page_size * per_tok * itemsize
+    return total
 
 
 class SharedPageBudget:

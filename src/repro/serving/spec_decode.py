@@ -18,6 +18,8 @@ Cache invariant shared with the engine: a cache holds embeddings of
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -25,7 +27,7 @@ import numpy as np
 from repro.models.config import ModelConfig
 from repro.models.transformer import logits_fn, model_forward
 from repro.serving.engine import _bucket
-from repro.serving.kvcache import PagedKVManager
+from repro.serving.kvcache import PagedKVManager, kv_page_bytes
 
 
 class SpecDecoder:
@@ -34,7 +36,32 @@ class SpecDecoder:
         self.cfg = draft_cfg
         self.params = draft_params
         e = engine.ecfg
-        self.kv = PagedKVManager(draft_cfg, total_pages=e.total_pages,
+        # Right-size the draft pool: it mirrors the target's token capacity
+        # (same page_size, so the same page count serves), but never more
+        # than every slot maxed out, and its HBM cost is charged to the
+        # cluster's SharedPageBudget in TARGET-page equivalents — a draft
+        # page is cheaper by the ratio of per-page KV bytes, and not
+        # charging at all would double-book HBM across replicas.
+        want = min(e.total_pages,
+                   e.max_slots * max(1, math.ceil(e.max_len / e.page_size)))
+        tgt_bytes = kv_page_bytes(engine.cfg, e.page_size, e.dtype)
+        dft_bytes = kv_page_bytes(draft_cfg, e.page_size, e.dtype)
+        ratio = dft_bytes / tgt_bytes if tgt_bytes > 0 else 0.0
+        self.budget_pages = 0       # target-page equivalents reserved
+        budget = engine.kv.budget
+        if budget is not None and ratio > 0.0:
+            charge = math.ceil(want * ratio)
+            if not budget.reserve(charge):
+                # shrink the draft pool to what the budget still affords;
+                # per-request fallbacks (acquire/capacity checks below)
+                # degrade to plain decode when the pool runs short
+                want = max(1, min(want, int(budget.available / ratio)))
+                charge = math.ceil(want * ratio)
+                if not budget.reserve(charge):
+                    charge = 0      # budget exhausted: minimal uncharged pool
+                    want = 1
+            self.budget_pages = charge
+        self.kv = PagedKVManager(draft_cfg, total_pages=want,
                                  page_size=e.page_size, max_seqs=e.max_slots,
                                  max_len=e.max_len, dtype=e.dtype)
         self._moe_cf = (float(draft_cfg.moe.n_experts) / draft_cfg.moe.top_k
@@ -159,12 +186,23 @@ class SpecDecoder:
             self.kv.truncate(rid, sl)
             return list(eng._decode_batched({rid: n_tokens},
                                             on_pressure)[rid])
+        # the fused verify kernel writes the window's KV in-kernel:
+        # re-assert the CoW contract over [tpos, tpos+L) like prefill does
+        eng.kv.check_writable(rid, tpos, L)
         buf = np.zeros((1, Lp), np.int32)
         buf[0, :L] = verify_in
+        from repro.models import attention as _attn
+        ops0 = dict(_attn.OP_STATS)
         ttoks, tcache = eng._verify(
             eng.params, jnp.asarray(buf), eng.kv.lane_cache([tslot]),
             jnp.asarray([tpos], jnp.int32), jnp.asarray([L], jnp.int32),
             eng.kv.table_rows([tslot]), eng.reqs[rid].enc_states)
+        eng.counters["verify_scatter_ops"] += (
+            _attn.OP_STATS["verify_write"] - ops0["verify_write"])
+        eng.counters["verify_attn_ops"] += (
+            _attn.OP_STATS["verify_attn"] - ops0["verify_attn"])
+        eng.counters["verify_fused_ops"] += (
+            _attn.OP_STATS["fused_verify"] - ops0["fused_verify"])
         eng.kv.absorb([tslot], tcache)
         eng.kv.seq_len[tslot] += L
         eng.counters["spec_verify_calls"] += 1
@@ -174,6 +212,13 @@ class SpecDecoder:
         while accepted < sl and int(target_toks[accepted]) == drafts[accepted]:
             accepted += 1
         emitted = [int(t) for t in target_toks[:accepted + 1]]
+        # report the verify outcome: totals for observability plus the
+        # per-rid tally the frontend folds into its per-SLO-class
+        # acceptance EWMA after this execute() call
+        eng.counters["spec_accepted_tokens"] += accepted
+        eng.counters["spec_drafted_tokens"] += sl
+        a0, d0 = eng.last_spec_stats.get(rid, (0, 0))
+        eng.last_spec_stats[rid] = (a0 + accepted, d0 + sl)
 
         # roll back target cache to the validated context
         eng.rollback(rid, sl - accepted)

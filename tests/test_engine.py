@@ -215,3 +215,162 @@ def test_engine_vlm_with_image_conditioning():
         b.add(2, StageKind.DECODE, 1)
         got2 += eng2.execute(b).get(2, [])
     assert got2 != got
+
+
+def test_spec_decode_verify_backend_bit_identical():
+    """The fused verify kernel (interpret mode on CPU) and the scatter+
+    gather reference must produce bit-identical greedy streams, and the
+    engine's OP_STATS audit must attribute the ops to the right backend."""
+    from repro.models import attention
+
+    rng = np.random.default_rng(4)
+    streams = {}
+    counters = {}
+    try:
+        for impl in ("gather", "fused"):
+            attention.PAGED_VERIFY_IMPL = impl
+            cfg, params, eng = make_engine(draft=True)
+            prompt = rng.integers(0, cfg.vocab, 16).tolist()
+            rng = np.random.default_rng(4)      # same prompt both runs
+            assert eng.add_request(1, prompt, expected_total=64)
+            b = Batch()
+            b.add(1, StageKind.PREFILL, 16)
+            got = eng.execute(b).get(1, [])
+            while len(got) < 12:
+                b = Batch(spec_step=3)
+                b.add(1, StageKind.DECODE, 4)
+                got += eng.execute(b).get(1, [])
+            streams[impl] = got
+            counters[impl] = dict(eng.counters)
+    finally:
+        attention.PAGED_VERIFY_IMPL = "auto"
+    assert streams["gather"] == streams["fused"], streams
+    # backend attribution: the gather run traced scatter+attn verify ops
+    # and no fused ones; the fused run the reverse
+    assert counters["gather"]["verify_scatter_ops"] > 0
+    assert counters["gather"]["verify_attn_ops"] > 0
+    assert counters["gather"]["verify_fused_ops"] == 0
+    assert counters["fused"]["verify_fused_ops"] > 0
+    assert counters["fused"]["verify_scatter_ops"] == 0
+    assert counters["fused"]["verify_attn_ops"] == 0
+    # acceptance accounting is backend-independent
+    assert (counters["gather"]["spec_accepted_tokens"]
+            == counters["fused"]["spec_accepted_tokens"])
+    assert counters["gather"]["spec_drafted_tokens"] > 0
+
+
+def test_spec_decode_preempt_replays_bit_identical():
+    """A speculative request preempted mid-stream must resume to the same
+    greedy stream: the target replays its recompute prefill and the draft
+    cache re-syncs from scratch (it was released at preemption)."""
+    cfg, params, eng = make_engine(draft=True)
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, cfg.vocab, 16).tolist()
+
+    def spec_steps(engine, got, n_rounds):
+        for _ in range(n_rounds):
+            b = Batch(spec_step=3)
+            b.add(1, StageKind.DECODE, 4)
+            got += engine.execute(b).get(1, [])
+        return got
+
+    # uninterrupted reference
+    assert eng.add_request(1, prompt, expected_total=64)
+    b = Batch()
+    b.add(1, StageKind.PREFILL, 16)
+    want = eng.execute(b).get(1, [])
+    want = spec_steps(eng, want, 5)
+
+    # interrupted run on a fresh engine: preempt after 2 spec rounds
+    cfg2, params2, eng2 = make_engine(draft=True)
+    assert eng2.add_request(1, prompt, expected_total=64)
+    b = Batch()
+    b.add(1, StageKind.PREFILL, 16)
+    got = eng2.execute(b).get(1, [])
+    got = spec_steps(eng2, got, 2)
+    n_before = len(got)
+
+    assert eng2.preempt(1) > 0
+    assert eng2.kv.used_pages == 0          # target pages all returned
+    assert eng2.spec.kv.used_pages == 0     # draft cache released too
+    ctx = eng2.reqs[1]
+    assert eng2.readmit(1, len(ctx.pending) + 16)
+    while ctx.pending:                      # recompute prefill: no emission
+        b = Batch()
+        b.add(1, StageKind.PREFILL, min(len(ctx.pending), 64))
+        assert eng2.execute(b).get(1, []) == []
+    got = spec_steps(eng2, got, 3)
+    assert len(got) > n_before              # speculation resumed for real
+    n = min(len(got), len(want))
+    assert got[:n] == want[:n], (got, want)
+
+
+def test_spec_decoder_draft_pool_budget_accounting():
+    """Satellite bugfix: the draft's PagedKVManager must not silently
+    double-book HBM — its pool is right-sized (not the engine's full
+    total_pages at target-page cost) and charged to the shared budget in
+    target-page equivalents."""
+    from repro.serving.kvcache import SharedPageBudget, kv_page_bytes
+
+    cfg = get_reduced("smollm-135m")
+    params = init_params(KEY, cfg)
+    import dataclasses as dc
+    dcfg = dc.replace(cfg, name=cfg.name + "-draft", n_layers=1,
+                      block_pattern=("attn",))
+    dparams = init_params(jax.random.PRNGKey(7), dcfg)
+    budget = SharedPageBudget(256)
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(max_slots=4, max_len=128,
+                                     total_pages=64),
+                        draft=(dcfg, dparams), kv_budget=budget)
+    spec = eng.spec
+    # the draft page is cheaper than the target page by the layer ratio;
+    # the budget charge reflects bytes, not raw page count
+    ratio = (kv_page_bytes(dcfg, eng.ecfg.page_size, eng.ecfg.dtype)
+             / kv_page_bytes(cfg, eng.ecfg.page_size, eng.ecfg.dtype))
+    assert 0 < ratio < 1
+    assert spec.budget_pages == int(np.ceil(spec.kv.total_pages * ratio))
+    # conservation: budget.used == target manager usage + the draft
+    # carve-out, throughout a spec-decoded stream
+    def conserved():
+        assert budget.used == eng.kv.used_pages + spec.budget_pages
+    conserved()
+    prompt = list(range(1, 17))
+    assert eng.add_request(1, prompt, expected_total=64)
+    b = Batch()
+    b.add(1, StageKind.PREFILL, 16)
+    eng.execute(b)
+    conserved()
+    for _ in range(2):
+        b = Batch(spec_step=3)
+        b.add(1, StageKind.DECODE, 4)
+        out = eng.execute(b).get(1, [])
+        assert out
+        conserved()
+    eng.finish(1)
+    conserved()
+    assert eng.kv.used_pages == 0
+
+
+def test_spec_decoder_pool_shrinks_under_budget_pressure():
+    """A nearly-exhausted shared budget shrinks the draft pool instead of
+    overdrawing it (and never goes negative)."""
+    from repro.serving.kvcache import SharedPageBudget
+
+    cfg = get_reduced("smollm-135m")
+    params = init_params(KEY, cfg)
+    import dataclasses as dc
+    dcfg = dc.replace(cfg, name=cfg.name + "-draft", n_layers=1,
+                      block_pattern=("attn",))
+    dparams = init_params(jax.random.PRNGKey(7), dcfg)
+    # unconstrained, the draft pool would want 32 pages (4 slots x 8
+    # pages) and charge 16 target-equivalents (2-layer target, 1-layer
+    # draft); an 8-page budget must shrink the pool, not overdraw
+    budget = SharedPageBudget(8)
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(max_slots=4, max_len=128,
+                                     total_pages=64),
+                        draft=(dcfg, dparams), kv_budget=budget)
+    assert eng.spec.budget_pages <= 8
+    assert 1 <= eng.spec.kv.total_pages < 32
+    assert budget.used == eng.spec.budget_pages <= budget.total_pages

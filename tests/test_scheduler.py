@@ -145,3 +145,39 @@ def test_plan_defers_over_cap():
     new = [simple_request(i, 0.0, 500, 100, 5.0, 0.1) for i in range(10)]
     res = sched.plan(0.0, [], new, mem_free=100_000)
     assert len(res.deferred) == 6
+
+
+def test_plan_disables_speculation_without_alpha():
+    perf = opt_perf_model(7e9, spec=True)
+    sched = SLOsServeScheduler(perf, SchedulerConfig(spec_alpha=None))
+    new = [simple_request(i, 0.0, 100, 50, 5.0, 0.0125) for i in range(4)]
+    sched.plan(0.0, [], new, mem_free=100_000)
+    tiers, sls, alphas = sched.last_spec_plan
+    assert sls is None and alphas is None
+
+
+def test_plan_spec_lens_adapt_to_estimator_drift():
+    """The co-optimized plan carries draft lengths from the acceptance
+    prior, and shrinks them when the attached per-class EWMA observes
+    acceptance collapse (§3.2.3's online adaptation)."""
+    from repro.core.spec_planner import AcceptanceEstimator
+    perf = opt_perf_model(7e9, spec=True)
+    sched = SLOsServeScheduler(perf, SchedulerConfig(spec_alpha=0.9))
+
+    def fresh():
+        return [simple_request(i, 0.0, 100, 50, 5.0, 0.0125)
+                for i in range(4)]
+
+    sched.plan(0.0, [], fresh(), mem_free=100_000)
+    _, sls_hi, alphas_hi = sched.last_spec_plan
+    assert sls_hi is not None and max(sls_hi) >= 1
+    assert alphas_hi == 0.9            # prior, no estimator attached
+
+    est = AcceptanceEstimator(prior=0.9, beta=0.8, warmup=1)
+    for _ in range(100):
+        est.observe(0.0125, 0, 8)      # acceptance collapses for the tier
+    sched.estimator = est
+    sched.plan(0.0, [], fresh(), mem_free=100_000)
+    _, sls_lo, alphas_lo = sched.last_spec_plan
+    assert alphas_lo[0] < 0.05
+    assert sls_lo is None or max(sls_lo) < max(sls_hi)

@@ -1,8 +1,10 @@
 import math
 
+import pytest
 
 from repro.core.perf_model import PerfModel, opt_perf_model
-from repro.core.spec_planner import acc_len, plan_speculation, strengthen_slo
+from repro.core.spec_planner import (AcceptanceEstimator, acc_len,
+                                     plan_speculation, strengthen_slo)
 
 
 def test_acc_len_bounds():
@@ -74,3 +76,129 @@ def test_strengthen_slo():
     assert strengthen_slo(0.1, 0) == 0.1
     assert strengthen_slo(0.1, 5) < 0.1
     assert strengthen_slo(0.1, 1000) > 0.0
+
+
+# ------------------- per-class alphas & closed form ---------------------- #
+def _closed_form_tpt(counts, tiers, perf, alphas, max_sl=8):
+    """Reference optimum by binding-tier enumeration: fix which tier binds
+    the batch latency and its draft length, derive every other tier's
+    minimal feasible draft length, and take the best.  Minimal sl is
+    optimal for non-binding tiers: raising it only adds decode tokens and
+    (via #SpecStep) shrinks the token budget."""
+    active = [l for l in range(len(tiers)) if counts[l] > 0]
+    if not active:
+        return math.inf
+    best = None
+    for b in active:
+        for sl_b in range(max_sl + 1):
+            T = tiers[b] * acc_len(sl_b, alphas[b])
+            sls = [0] * len(tiers)
+            sls[b] = sl_b
+            ok = True
+            for l in active:
+                if l == b:
+                    continue
+                sl = next((s for s in range(max_sl + 1)
+                           if tiers[l] * acc_len(s, alphas[l])
+                           >= T - 1e-12), None)
+                if sl is None:
+                    ok = False     # tier l cannot stretch to latency T
+                    break
+                sls[l] = sl
+            if not ok:
+                continue
+            spec_step = max(sls[l] for l in active)
+            cap = perf.time2bs(T, spec_step=spec_step)
+            pb = cap - sum(counts[l] * (sls[l] + 1) for l in active)
+            if pb < 0:
+                continue
+            tpt = pb / T if T > 0 else 0.0
+            if best is None or tpt > best:
+                best = tpt
+    return best
+
+
+def test_plan_speculation_per_tier_alphas_match_closed_form():
+    """Exhaustive search == binding-tier closed form at per-class alphas."""
+    perf = opt_perf_model(7e9, spec=True)
+    cases = [
+        ([8, 20], [0.02, 0.05], [0.9, 0.5]),
+        ([30, 5], [0.0125, 0.1], [0.95, 0.3]),
+        ([4, 4, 12], [0.01, 0.03, 0.1], [0.85, 0.6, 0.4]),
+    ]
+    for counts, tiers, alphas in cases:
+        plan = plan_speculation(counts, tiers, perf, alphas)
+        ref = _closed_form_tpt(counts, tiers, perf, alphas)
+        if plan is None:
+            assert ref is None
+        else:
+            assert ref is not None
+            assert plan.prefill_tpt == pytest.approx(ref, rel=1e-9), \
+                (counts, tiers, alphas)
+
+
+def test_plan_speculation_per_tier_alphas_differentiate_tiers():
+    """A tight-TPOT high-acceptance class earns long drafts while a loose
+    low-acceptance class stays (near-)autoregressive — the per-request
+    draft-length choice AdaServe's capacity win comes from."""
+    perf = opt_perf_model(7e9, spec=True)
+    plan = plan_speculation([10, 10], [0.008, 0.1], perf, [0.9, 0.05])
+    assert plan is not None
+    assert plan.spec_lens[0] >= 2       # sub-floor TPOT needs speculation
+    assert plan.spec_lens[1] <= 1       # useless drafts stay short
+    # and flipping the alphas must not grant the loose tier long drafts
+    flipped = plan_speculation([10, 10], [0.008, 0.1], perf, [0.05, 0.9])
+    assert flipped is None or max(flipped.spec_lens) <= 1
+
+
+def test_plan_speculation_scalar_equals_uniform_sequence():
+    perf = opt_perf_model(7e9, spec=True)
+    a = plan_speculation([10], [0.0125], perf, 0.8)
+    b = plan_speculation([10], [0.0125], perf, [0.8])
+    assert a.spec_lens == b.spec_lens
+    assert a.prefill_tpt == b.prefill_tpt
+
+
+# --------------------------- acceptance EWMA ----------------------------- #
+def test_estimator_warmup_returns_prior():
+    est = AcceptanceEstimator(prior=0.7, warmup=8)
+    assert est.alpha("chat") == 0.7
+    est.observe("chat", 1, 4)          # 4 drafted < warmup
+    assert est.alpha("chat") == 0.7
+    est.observe("chat", 1, 4)          # crosses the warmup threshold
+    assert est.alpha("chat") != 0.7
+
+
+def test_estimator_tracks_drift():
+    est = AcceptanceEstimator(prior=0.7, beta=0.9, warmup=4)
+    for _ in range(50):
+        est.observe("code", 9, 10)     # sustained 0.9 acceptance
+    hi = est.alpha("code")
+    assert hi == pytest.approx(0.9, abs=0.02)
+    for _ in range(50):
+        est.observe("code", 2, 10)     # domain shift: acceptance collapses
+    lo = est.alpha("code")
+    assert lo == pytest.approx(0.2, abs=0.02)
+    assert lo < hi
+
+
+def test_estimator_per_class_isolation():
+    est = AcceptanceEstimator(prior=0.5, warmup=1)
+    for _ in range(30):
+        est.observe(0.05, 8, 8)        # tight tier: perfect acceptance
+    assert est.alpha(0.1) == 0.5       # untouched class keeps the prior
+    for _ in range(30):
+        est.observe(0.1, 0, 8)
+    assert est.alpha(0.05) > 0.9       # and vice versa
+    assert est.alpha(0.1) < 0.1
+    snap = est.snapshot()
+    assert set(snap) == {0.05, 0.1}
+
+
+def test_estimator_weighting_by_drafted_tokens():
+    """A sl=8 verify moves the EWMA further than a sl=1 verify."""
+    a = AcceptanceEstimator(prior=0.5, beta=0.9, warmup=0)
+    b = AcceptanceEstimator(prior=0.5, beta=0.9, warmup=0)
+    a.observe("k", 1, 1)
+    b.observe("k", 8, 8)
+    assert b.alpha("k") > a.alpha("k")
