@@ -66,12 +66,157 @@ def run_real(rate: float = 2.5, duration: float = 8.0):
          f"preempted={stats.preempted};tokens={stats.tokens_out}")
 
 
+def _autoscale_trace():
+    """Deterministic two-SLO-class burst trace at CPU-executable scale:
+    quiet -> 4s sustained burst at ~7x the quiet rate -> quiet.  Two
+    TPOT classes
+    so per-class attainment (the autoscaler's demand signal and the
+    metric under test) is exercised, not just an aggregate.  The loose
+    TTFT slowdown + 12-token decodes make TPOT the binding SLO: at this
+    scale 2 replicas visibly lose the burst (preemptions under page
+    pressure stretch decode gaps) while 3 replicas hold it."""
+    from repro.core.request import simple_request
+
+    reqs = []
+    rid = 0
+
+    def span(t0, t1, gap):
+        nonlocal rid
+        t = t0
+        while t < t1:
+            tight = rid % 2 == 0
+            reqs.append(simple_request(
+                rid, round(t, 3), prompt=8 + (rid % 3) * 2, output=12,
+                ttft_slowdown=10.0, tpot=0.05 if tight else 0.15))
+            rid += 1
+            t += gap
+
+    span(0.0, 3.0, 0.5)          # quiet
+    span(3.0, 7.0, 0.07)         # sustained burst
+    span(7.0, 10.0, 0.5)         # quiet drain
+    return reqs
+
+
+def _autoscale_cluster(n_replicas: int, telemetry=True):
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.core.perf_model import cpu_scale_perf_model
+    from repro.core.router import RoutingPolicy, make_real_cluster
+    from repro.core.scheduler import SchedulerConfig
+    from repro.models import init_params
+
+    cfg = get_reduced("smollm-135m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return make_real_cluster(
+        n_replicas, cfg, params, cpu_scale_perf_model(),
+        policy=RoutingPolicy(max_hops=1),
+        total_pages=48, replica_pages=16, page_size=4,
+        max_slots=8, max_len=96,
+        sched_cfg=SchedulerConfig(page_size=4,
+                                  prefill_emits_first_token=True),
+        telemetry=telemetry)
+
+
+def _avg_replicas(tracer) -> float:
+    """Time-weighted mean replica count over the step trace."""
+    steps = tracer.records("step")
+    if len(steps) < 2:
+        return float(steps[0]["replicas"]) if steps else 1.0
+    num = den = 0.0
+    for a, b in zip(steps, steps[1:]):
+        dt = max(b["t"] - a["t"], 0.0)
+        num += a["replicas"] * dt
+        den += dt
+    return num / den if den else float(steps[-1]["replicas"])
+
+
+def run_autoscale(smoke: bool = False):
+    """Closing the telemetry loop (ROADMAP item 5 acceptance): replay a
+    burst trace through (a) an elastic pool driven by the attainment/
+    page-pressure autoscaler and (b) a static pool of the same *average*
+    size, and compare per-SLO-class attainment.  ``--smoke`` additionally
+    asserts the elastic pool wins and that the Prometheus dump + JSONL
+    step trace are consistent with the final ClusterStats."""
+    from repro.telemetry import (Autoscaler, AutoscalerConfig,
+                                 parse_prometheus)
+
+    # ---- elastic pool: starts at 2 replicas, scaler may grow to 3 ---- #
+    cl = _autoscale_cluster(2)
+    cl.autoscaler = Autoscaler(cl.telemetry, AutoscalerConfig(
+        min_replicas=1, max_replicas=3, attain_low=0.95, attain_high=0.99,
+        pressure_high=0.70, backlog_high=1.5, window=6,
+        up_cooldown=0.3, down_cooldown=2.0, down_patience=4))
+    for r in _autoscale_trace():
+        cl.submit(r)
+    auto = cl.run_until_idle(max_steps=3000)
+    auto_cls = cl.telemetry.per_class_attainment()
+    ups = [d for d in cl.autoscaler.decisions if d.action == "up"]
+    downs = [d for d in cl.autoscaler.decisions if d.action == "down"]
+    avg = _avg_replicas(cl.telemetry.tracer)
+    peak = max(r["replicas"] for r in cl.telemetry.tracer.records("step"))
+    prom = cl.telemetry.prometheus()
+    trace = cl.telemetry.tracer.records("step")
+
+    # ---- static pool of the same average size ---- #
+    n_static = max(1, round(avg))
+    st = _autoscale_cluster(n_static)
+    for r in _autoscale_trace():
+        st.submit(r)
+    static = st.run_until_idle(max_steps=3000)
+    static_cls = st.telemetry.per_class_attainment()
+
+    def worst(d):
+        return min(d.values()) if d else 0.0
+
+    emit("burst_autoscale_elastic", auto.attainment * 100,
+         f"served={auto.served}/{auto.submitted};"
+         f"worst_class={worst(auto_cls):.2f};"
+         f"avg_replicas={avg:.2f};peak={peak:.0f};"
+         f"ups={len(ups)};downs={len(downs)}")
+    emit(f"burst_autoscale_static_{n_static}rep", static.attainment * 100,
+         f"served={static.served}/{static.submitted};"
+         f"worst_class={worst(static_cls):.2f}")
+
+    if smoke:
+        # the scaler actually acted, and the elastic pool held attainment
+        # the same-average-size static pool lost
+        assert ups, "autoscaler never scaled up on the burst"
+        assert peak > n_static, (peak, n_static)
+        assert auto.attainment > static.attainment, (auto.attainment,
+                                                     static.attainment)
+        assert worst(auto_cls) > worst(static_cls), (auto_cls, static_cls)
+        # Prometheus dump consistent with ClusterStats on the same run
+        parsed = parse_prometheus(prom)
+        fin = {k: v for k, v in parsed.items()
+               if k[0] == "repro_requests_finished_total"}
+        assert sum(fin.values()) == auto.served, (sum(fin.values()),
+                                                  auto.served)
+        att = sum(v for k, v in fin.items()
+                  if ("attained", "true") in k[1])
+        assert att == auto.attained, (att, auto.attained)
+        assert any(k[0] == "repro_ttft_seconds_bucket" for k in parsed)
+        assert any(k[0] == "repro_page_occupancy_ratio" for k in parsed)
+        # step trace carries the attainment + page-pressure series
+        assert any("attain_win[tpot=0.05]" in r for r in trace)
+        assert all("page_pressure" in r for r in trace)
+        emit("burst_autoscale_smoke", 1.0, "ok=1")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--real", action="store_true",
                     help="also replay the burst through a 2-replica real "
                          "cluster (CPU-scale engine execution)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="elastic-vs-static A/B on a real burst trace "
+                         "(attainment-driven autoscaler)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert the autoscale acceptance criteria")
     args = ap.parse_args()
-    run()
+    if not args.autoscale:
+        run()
     if args.real:
         run_real()
+    if args.autoscale:
+        run_autoscale(smoke=args.smoke)

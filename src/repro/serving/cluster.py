@@ -38,6 +38,7 @@ from repro.models.config import ModelConfig
 from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.frontend import ReplicaDriver
 from repro.serving.kvcache import SharedPageBudget
+from repro.telemetry.instruments import ClusterTelemetry
 
 
 @dataclasses.dataclass
@@ -50,11 +51,37 @@ class ClusterStats:
     best_effort: int = 0     # requests demoted to the best-effort tier
     preempted: int = 0       # real PagedKVManager.preempt invocations
     tokens_out: int = 0
+    prompt_tokens: int = 0       # prompt tokens submitted (hit-rate denom)
     prefix_hit_tokens: int = 0   # prompt tokens served from shared pages
     partial_hit_tokens: int = 0  # of which: token-level boundary-head hits
     affinity_routed: int = 0     # first probes placed by prefix affinity
     spec_drafted_tokens: int = 0   # draft proposals verified by targets
     spec_accepted_tokens: int = 0  # of which: accepted (EWMA feed)
+
+    # Derived ratios, all guarded against zero-denominator runs (a trace
+    # with no terminal requests, no speculation, or no prompts must read
+    # as 0.0, not raise).
+    @property
+    def attainment(self) -> float:
+        return self.attained / self.served if self.served else 0.0
+
+    @property
+    def spec_acceptance_rate(self) -> float:
+        return (self.spec_accepted_tokens / self.spec_drafted_tokens
+                if self.spec_drafted_tokens else 0.0)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return (self.prefix_hit_tokens / self.prompt_tokens
+                if self.prompt_tokens else 0.0)
+
+    def as_dict(self) -> dict:
+        """Counters + derived ratios, for exporters / JSON reports."""
+        d = dataclasses.asdict(self)
+        d["attainment"] = self.attainment
+        d["spec_acceptance_rate"] = self.spec_acceptance_rate
+        d["prefix_hit_rate"] = self.prefix_hit_rate
+        return d
 
 
 @dataclasses.dataclass
@@ -68,18 +95,29 @@ class _Payload:
 
 class ClusterFrontend:
     def __init__(self, drivers: list[ReplicaDriver],
-                 policy: RoutingPolicy = None, seed: int = 0):
+                 policy: RoutingPolicy = None, seed: int = 0,
+                 telemetry: Optional[ClusterTelemetry] = None):
         self.drivers = drivers
         self.policy = policy or RoutingPolicy()
         self.rng = np.random.default_rng(seed)
         self.budget: Optional[SharedPageBudget] = None
+        self.telemetry = telemetry
+        self.autoscaler = None           # optional; stepped after sampling
         self.clock = 0.0
         self.pending: list[_Payload] = []
         self.payloads: dict[int, _Payload] = {}
+        # replica pool elasticity (autoscaler): draining replicas receive
+        # no routed work and retire once idle; retired replicas' terminal
+        # stats accumulate in _retired so cluster totals never regress
+        self.draining: set[int] = set()
+        self._retired = ClusterStats()
+        self._spawn = None               # set by build(): idx -> driver
+        self._next_idx = len(drivers)
         self._rr = 0
         self._routed: set[int] = set()
         self._submitted = 0
         self._dropped = 0
+        self._prompt_tokens = 0
         self._affinity_routed = 0
 
     # ------------------------------------------------------------------ #
@@ -92,7 +130,8 @@ class ClusterFrontend:
               seed: int = 0, draft: Optional[tuple] = None,
               spec_alpha: Optional[float] = None,
               share_prefix: bool = True,
-              token_level_prefix: bool = True) -> "ClusterFrontend":
+              token_level_prefix: bool = True,
+              telemetry=None) -> "ClusterFrontend":
         """Carve ``total_pages`` (one shared budget) into per-replica paged
         KV pools and stand up N real engines over shared ``params``.
         ``replica_pages`` defaults to an even split; setting it higher lets
@@ -104,14 +143,22 @@ class ClusterFrontend:
         supplied) seeds the per-replica schedulers' acceptance prior so
         their plans actually carry speculative draft lengths — each
         ReplicaDriver then attaches a per-SLO-class EWMA that adapts the
-        plan to observed acceptance."""
+        plan to observed acceptance.
+
+        ``telemetry`` is a ``ClusterTelemetry``, a bool forcing metrics
+        on/off regardless of ``REPRO_METRICS``, or None (env default)."""
         budget = SharedPageBudget(total_pages)
         if replica_pages is None:
             replica_pages = max(1, total_pages // n_replicas)
         if spec_alpha is None and draft is not None:
             spec_alpha = 0.7
-        drivers = []
-        for i in range(n_replicas):
+        if not isinstance(telemetry, ClusterTelemetry):
+            telemetry = ClusterTelemetry(enabled=telemetry)
+
+        def make_driver(i: int) -> ReplicaDriver:
+            """Spawn replica ``i`` — also the autoscaler's grow path, so
+            added replicas are configured exactly like the initial pool
+            (same shared budget, params, and scheduler config)."""
             eng = ServingEngine(
                 model_cfg, params,
                 EngineConfig(max_slots=max_slots, max_len=max_len,
@@ -126,10 +173,16 @@ class ClusterFrontend:
                 # REPRO_SPEC_DECODE env default (dataclass default_factory)
                 kw["spec_alpha"] = spec_alpha
             cfg = sched_cfg or SchedulerConfig(**kw)
-            drivers.append(ReplicaDriver(eng, SLOsServeScheduler(perf, cfg),
-                                         idx=i, seed=seed + i))
-        cluster = cls(drivers, policy=policy, seed=seed)
+            tel = telemetry.replica(i) if telemetry.enabled else None
+            return ReplicaDriver(eng, SLOsServeScheduler(perf, cfg),
+                                 idx=i, seed=seed + i, telemetry=tel)
+
+        drivers = [make_driver(i) for i in range(n_replicas)]
+        cluster = cls(drivers, policy=policy, seed=seed,
+                      telemetry=telemetry)
         cluster.budget = budget
+        cluster._spawn = make_driver
+        cluster._next_idx = n_replicas
         return cluster
 
     # ------------------------------------------------------------------ #
@@ -140,6 +193,8 @@ class ClusterFrontend:
         self.payloads[req.rid] = p
         self.pending.append(p)
         self._submitted += 1
+        self._prompt_tokens += (len(prompt) if prompt is not None
+                                else req.stages[0].length)
 
     @property
     def idle(self) -> bool:
@@ -147,9 +202,14 @@ class ClusterFrontend:
 
     @property
     def stats(self) -> ClusterStats:
-        s = ClusterStats(submitted=self._submitted, dropped=self._dropped,
-                         served=self._dropped, routed=len(self._routed),
-                         affinity_routed=self._affinity_routed)
+        base = self._retired
+        s = dataclasses.replace(
+            base, submitted=self._submitted,
+            dropped=base.dropped + self._dropped,
+            served=base.served + self._dropped,
+            routed=len(self._routed),
+            affinity_routed=self._affinity_routed,
+            prompt_tokens=self._prompt_tokens)
         for d in self.drivers:
             s.served += d.stats.served
             s.attained += d.stats.attained
@@ -171,12 +231,20 @@ class ClusterFrontend:
         shared pages there make its DP verdict cheaper to satisfy and the
         prefill shorter), falling back to round-robin when no replica
         holds any of the prefix (or the prompt is not known yet)."""
-        rr = self._rr % len(self.drivers)
+        n = len(self.drivers)
+        rr = self._rr % n
         self._rr += 1
+        if self.draining:                # never first-pick a draining replica
+            for k in range(n):
+                if self.drivers[(rr + k) % n].idx not in self.draining:
+                    rr = (rr + k) % n
+                    break
         if not self.policy.prefix_affinity or p.prompt is None \
                 or p.enc_states is not None:
             return rr
-        hits = [d.engine.kv.probe_prefix(p.prompt) for d in self.drivers]
+        hits = [-1 if d.idx in self.draining
+                else d.engine.kv.probe_prefix(p.prompt)
+                for d in self.drivers]
         best = int(np.argmax(hits))
         if hits[best] <= 0:
             return rr
@@ -190,9 +258,14 @@ class ClusterFrontend:
         the hop limit is exhausted."""
         req = p.req
         n = len(self.drivers)
+        # rotation from the first choice, draining replicas filtered out
+        # (they take no new work); with nothing live the full rotation is
+        # the fallback so the request still terminates via backup policy
+        order = [self.drivers[(p.start + k) % n] for k in range(n)]
+        cands = [d for d in order if d.idx not in self.draining] or order
         probe = p.prompt if p.enc_states is None else None
         while req.routing_hops <= self.policy.max_hops:
-            d = self.drivers[(p.start + req.routing_hops) % n]
+            d = cands[req.routing_hops % len(cands)]
             if d.verdict(now, req, probe):
                 if req.routing_hops > 0:
                     self._routed.add(req.rid)
@@ -201,13 +274,114 @@ class ClusterFrontend:
                 return
             req.routing_hops += 1
         if self.policy.backup == "best_effort":
-            d = min(self.drivers, key=lambda x: len(x.be))
+            d = min(cands, key=lambda x: len(x.be))
             d.enqueue(req, p.prompt, p.on_token, p.enc_states,
                       best_effort=True)
             p.prompt = d.prompts[req.rid]
         else:
             self._dropped += 1
             self.payloads.pop(req.rid, None)
+
+    # --------------------- replica pool elasticity ---------------------- #
+    def add_replica(self) -> ReplicaDriver:
+        """Grow the pool by one replica (autoscaler scale-up).  The new
+        engine draws on the SAME SharedPageBudget, so aggregate KV memory
+        stays bounded regardless of pool size."""
+        if self._spawn is None:
+            raise RuntimeError(
+                "add_replica requires a cluster built via "
+                "ClusterFrontend.build (no spawn recipe available)")
+        d = self._spawn(self._next_idx)
+        self._next_idx += 1
+        self.drivers.append(d)
+        return d
+
+    def drain_replica(self, i: int) -> ReplicaDriver:
+        """Begin graceful removal of ``drivers[i]``: it stops receiving
+        routed work, queued (not yet admitted) arrivals bounce back
+        through routing, and its best-effort tier migrates to live peers
+        via the preempt + drop/restore recompute-replay machinery — each
+        migrated request resumes on the target with a bit-identical token
+        stream.  In-flight SLO-guaranteed requests finish in place; the
+        replica retires (leaves the pool) once idle, inside ``step``."""
+        d = self.drivers[i]
+        if d.idx in self.draining:
+            return d
+        if len(self.drivers) - len(self.draining) <= 1:
+            raise RuntimeError("cannot drain the last live replica")
+        self.draining.add(d.idx)
+        now = self.clock
+        for r in list(d.new_q):          # not yet admitted: just re-route
+            d.new_q.remove(r)
+            p = self.payloads.get(r.rid)
+            d.forget(r.rid)
+            if p is not None:
+                self._route(p, now)
+            else:
+                self._dropped += 1
+        targets = [x for x in self.drivers if x.idx not in self.draining]
+        for e in list(d.be.entries):
+            dst = min(targets, key=lambda x: len(x.be))
+            self._migrate(d, dst, e)
+        return d
+
+    def _migrate(self, src: ReplicaDriver, dst: ReplicaDriver, e) -> None:
+        """Move one best-effort entry from ``src`` to ``dst``: preempt
+        (free src device pages), drop the full context, and stash it as
+        ``dst.saved_ctx`` — dst's best-effort loop later restores it and
+        replays the recompute prefill for an identical continuation."""
+        r = e.req
+        rid = r.rid
+        src.be.entries.remove(e)
+        if rid in src.engine.reqs:
+            if r.kv_resident:
+                src.engine.preempt(rid)
+                r.kv_resident = False
+                src.stats.preempted += 1
+                if src.tel is not None:
+                    src.tel.preemptions.inc()
+            ctx = src.engine.drop(rid)
+        else:
+            ctx = src.saved_ctx.pop(rid, None)
+        if rid in src.prompts:
+            dst.prompts[rid] = src.prompts.pop(rid)
+        if rid in src.streams:
+            dst.streams[rid] = src.streams.pop(rid)
+        if rid in src.encs:
+            dst.encs[rid] = src.encs.pop(rid)
+        src.saved_ctx.pop(rid, None)
+        if ctx is not None:
+            dst.saved_ctx[rid] = ctx
+        dst.be.add(r)
+        moved = dst.be.entries[-1]
+        moved.generated = e.generated
+        if ctx is not None:
+            moved.recompute_remaining = len(ctx.pending)
+            moved.prefilled = False
+
+    def _retire(self, d: ReplicaDriver) -> None:
+        """Remove an idle draining replica, folding its terminal stats
+        into the retained base so cluster totals never move backwards.
+        An idle replica holds no live pages, and its cached (zero-ref)
+        prefix pages already credited the shared budget at unref, so
+        removal cannot leak budget."""
+        s = self._retired
+        s.served += d.stats.served
+        s.attained += d.stats.attained
+        s.dropped += d.stats.dropped
+        s.best_effort += d.stats.best_effort
+        s.tokens_out += d.stats.tokens_out
+        s.preempted += d.engine.counters["preemptions"]
+        s.prefix_hit_tokens += d.engine.counters["prefix_hit_tokens"]
+        s.partial_hit_tokens += d.engine.kv.partial_hit_tokens
+        s.spec_drafted_tokens += d.engine.counters["spec_drafted_tokens"]
+        s.spec_accepted_tokens += d.engine.counters["spec_accepted_tokens"]
+        self.drivers.remove(d)
+        self.draining.discard(d.idx)
+        if self.telemetry is not None:
+            self.telemetry.tracer.emit(
+                {"kind": "retire", "t": round(self.clock, 6),
+                 "replica": d.idx})
 
     # ------------------------------------------------------------------ #
     def step(self, max_batches: int = 8) -> int:
@@ -251,6 +425,14 @@ class ClusterFrontend:
                 if a is not None:
                     nxt = min(nxt, a)
             self.clock = max(now + 0.05, nxt)
+        if self.draining:                # retire drained-empty replicas
+            for d in list(self.drivers):
+                if d.idx in self.draining and d.idle:
+                    self._retire(d)
+        if self.telemetry is not None:
+            self.telemetry.on_step(self, self.clock, n_exec)
+            if self.autoscaler is not None:
+                self.autoscaler.step(self, self.clock)
         return n_exec
 
     # ------------------------------------------------------------------ #

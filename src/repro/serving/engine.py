@@ -25,6 +25,7 @@ one-device-call-per-decode-group invariant.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 from typing import Optional
@@ -39,6 +40,9 @@ from repro.models.config import ModelConfig
 from repro.models.transformer import logits_fn, model_forward
 from repro.serving.kvcache import PagedKVManager
 from repro.serving.sampling import sample
+
+
+_NULL_CTX = contextlib.nullcontext()    # reusable: nullcontext is stateless
 
 
 def _bucket(n: int, buckets=(8, 16, 32, 64, 128, 256, 512, 1024, 2048)) -> int:
@@ -162,6 +166,9 @@ class ServingEngine:
         # steps — the frontend feeds these into its per-SLO-class
         # AcceptanceEstimator after each batch
         self.last_spec_stats: dict[int, tuple[int, int]] = {}
+        # optional StepTracer (telemetry): when set, execute() wraps the
+        # prefill / decode / verify dispatch in timing spans
+        self.tracer = None
         # speculative decoding: (draft_cfg, draft_params)
         self.spec = None
         if draft is not None:
@@ -410,19 +417,29 @@ class ServingEngine:
                 prefills.append((e.rid, e.n_tokens))
             else:
                 decode_rids.append((e.rid, e.n_tokens))
-        for group in self._group_prefills(prefills, on_pressure):
-            for rid, toks in self._prefill_group(*group).items():
-                emitted.setdefault(rid, []).extend(toks)
+        with self._tspan("prefill", n=len(prefills)) if prefills \
+                else _NULL_CTX:
+            for group in self._group_prefills(prefills, on_pressure):
+                for rid, toks in self._prefill_group(*group).items():
+                    emitted.setdefault(rid, []).extend(toks)
         if decode_rids:
             if batch.spec_step > 0 and self.spec is not None:
-                for rid, n in decode_rids:
-                    emitted.setdefault(rid, []).extend(
-                        self.spec.decode(rid, n, on_pressure))
+                with self._tspan("verify", n=len(decode_rids)):
+                    for rid, n in decode_rids:
+                        emitted.setdefault(rid, []).extend(
+                            self.spec.decode(rid, n, on_pressure))
             else:
-                out = self._decode_batched(dict(decode_rids), on_pressure)
-                for rid, toks in out.items():
-                    emitted.setdefault(rid, []).extend(toks)
+                with self._tspan("decode", n=len(decode_rids)):
+                    out = self._decode_batched(dict(decode_rids),
+                                               on_pressure)
+                    for rid, toks in out.items():
+                        emitted.setdefault(rid, []).extend(toks)
         return emitted
+
+    def _tspan(self, name: str, **attrs):
+        if self.tracer is None:
+            return _NULL_CTX
+        return self.tracer.span(name, **attrs)
 
     # ------------------------------------------------------------------ #
     def _group_prefills(self, entries, on_pressure=None):

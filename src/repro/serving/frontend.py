@@ -19,7 +19,9 @@ deterministic and testable; the engine executes every token for real.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import numpy as np
@@ -31,6 +33,10 @@ from repro.core.scheduler import SLOsServeScheduler
 from repro.core.slo import StageKind
 from repro.core.spec_planner import AcceptanceEstimator
 from repro.serving.engine import ServingEngine
+
+
+def _null_span(name, **attrs):
+    return contextlib.nullcontext()
 
 
 @dataclasses.dataclass
@@ -56,10 +62,19 @@ class ReplicaDriver:
     ``ServingFrontend`` and the multi-replica ``ClusterFrontend``."""
 
     def __init__(self, engine: ServingEngine, scheduler: SLOsServeScheduler,
-                 idx: int = 0, seed: int = 0):
+                 idx: int = 0, seed: int = 0, telemetry=None):
         self.engine = engine
         self.sched = scheduler
         self.idx = idx
+        # telemetry is a ReplicaTelemetry (or None when disabled): every
+        # hot-path hook below is guarded by one `is not None` check, so a
+        # bare driver pays nothing
+        self.tel = telemetry
+        self._span = _null_span
+        if telemetry is not None and telemetry.tracer is not None \
+                and telemetry.tracer.enabled:
+            self._span = telemetry.tracer.span
+            engine.tracer = telemetry.tracer
         self.rng = np.random.default_rng(seed)
         self.new_q: list[Request] = []
         self.running: list[Request] = []
@@ -105,6 +120,8 @@ class ReplicaDriver:
         if best_effort:
             self.be.add(req)
             self.stats.best_effort += 1
+            if self.tel is not None:
+                self.tel.best_effort.inc()
         else:
             self.new_q.append(req)
 
@@ -117,6 +134,8 @@ class ReplicaDriver:
     def drop_request(self, r: Request) -> None:
         self.stats.dropped += 1
         self.stats.served += 1
+        if self.tel is not None:
+            self.tel.on_drop(r)
         self.forget(r.rid)
 
     @property
@@ -196,8 +215,14 @@ class ReplicaDriver:
         arrivals = [r for r in self.new_q if r.arrival <= now]
         self.new_q = [r for r in self.new_q if r.arrival > now]
         cached, live = self._discounts(arrivals)
-        plan = self.sched.plan(now, self.running, arrivals, self._mem_free(),
-                               cached_prefix=cached, live_prefix=live)
+        t0 = time.perf_counter()
+        with self._span("plan", replica=self.idx):
+            plan = self.sched.plan(now, self.running, arrivals,
+                                   self._mem_free(),
+                                   cached_prefix=cached, live_prefix=live)
+        if self.tel is not None:
+            self.tel.on_plan(time.perf_counter() - t0, plan.admitted,
+                             plan.declined, plan.deferred)
         for r in plan.admitted:
             if self._admit(r, now):
                 r.state = RequestState.RUNNING
@@ -210,16 +235,20 @@ class ReplicaDriver:
         t = now
         by_rid = {r.rid: r for r in self.running}
         for b in plan.batches[:max_batches]:
-            out = self.engine.execute(b, on_pressure=self._preempt_for)
+            with self._span("execute", replica=self.idx,
+                            n=len(b.entries), spec=b.spec_step):
+                out = self.engine.execute(b, on_pressure=self._preempt_for)
             t += max(b.est_duration, 1e-3)
             res.n_exec += 1
+            pref_done = 0
             prog = self.engine.last_prefill_progress
             for e in b.entries:          # prefill progress = fresh tokens
                 r = by_rid.get(e.rid)    # actually consumed (replay after
                 if r is not None and e.kind == StageKind.PREFILL \
                         and r.in_prefill:      # preemption doesn't count)
-                    r.advance(min(prog.get(e.rid, 0),
-                                  r.remaining_in_stage), t)
+                    adv = min(prog.get(e.rid, 0), r.remaining_in_stage)
+                    r.advance(adv, t)
+                    pref_done += adv
             est = self.sched.estimator
             if est is not None:
                 # fold this batch's verify outcomes into the per-SLO-class
@@ -230,13 +259,19 @@ class ReplicaDriver:
                     r = by_rid.get(rid)
                     if r is not None and drafted > 0:
                         est.observe(r.tightest_tpot(), acc, drafted)
+            dec_done = 0
             for rid, toks in out.items():
                 self.stats.tokens_out += len(toks)
+                dec_done += len(toks)
                 if toks and rid in self.streams:
                     self.streams[rid](rid, toks)
                 r = by_rid.get(rid)
                 if r is not None:
                     r.advance(len(toks), t)
+            if self.tel is not None:
+                self.tel.on_batch_planned(b)
+                self.tel.on_delivered(StageKind.PREFILL, pref_done)
+                self.tel.on_delivered(StageKind.DECODE, dec_done)
             # surplus batch budget flows to the best-effort tier (§4.1)
             if b.prefill_budget > 0 and len(self.be):
                 self._serve_best_effort(b.prefill_budget, t)
@@ -270,7 +305,10 @@ class ReplicaDriver:
         if r in self.running:
             self.running.remove(r)
         self.stats.served += 1
-        self.stats.attained += r.slo_attained(self.sched.zero_load_time)
+        att = r.slo_attained(self.sched.zero_load_time)
+        self.stats.attained += att
+        if self.tel is not None:
+            self.tel.on_finish(r, bool(att))
         self.forget(r.rid)
 
     # -------------------- admission & victim selection ------------------ #
@@ -339,6 +377,8 @@ class ReplicaDriver:
             e.recompute_remaining = len(self.engine.reqs[r.rid].pending)
             e.prefilled = False
             self.stats.preempted += 1
+            if self.tel is not None:
+                self.tel.preemptions.inc()
             self.preempted_rids.add(r.rid)
         return freed
 
@@ -356,6 +396,8 @@ class ReplicaDriver:
                 e.recompute_remaining = len(self.engine.reqs[r.rid].pending)
                 e.prefilled = False
                 self.stats.preempted += 1
+                if self.tel is not None:
+                    self.tel.preemptions.inc()
                 self.preempted_rids.add(r.rid)
             self.saved_ctx[r.rid] = self.engine.drop(r.rid)
             return True
@@ -502,12 +544,24 @@ class ServingFrontend:
     server would wrap ``submit`` / ``step`` with its transport."""
 
     def __init__(self, engine: ServingEngine, scheduler: SLOsServeScheduler,
-                 max_decline_retries: int = 3, seed: int = 0):
+                 max_decline_retries: int = 3, seed: int = 0,
+                 telemetry=None):
         self.engine = engine
         self.sched = scheduler
         self.max_retries = max_decline_retries
-        self.driver = ReplicaDriver(engine, scheduler, seed=seed)
+        # telemetry is an optional ClusterTelemetry hub; the driver gets
+        # its replica-0 instrument and `step` drives the per-step sampler
+        self.telemetry = telemetry
+        tel = telemetry.replica(0) \
+            if telemetry is not None and telemetry.enabled else None
+        self.driver = ReplicaDriver(engine, scheduler, seed=seed,
+                                    telemetry=tel)
+        self.draining: set[int] = set()      # on_step compatibility
         self.clock = 0.0
+
+    @property
+    def drivers(self) -> list[ReplicaDriver]:
+        return [self.driver]
 
     @property
     def stats(self) -> FrontendStats:
@@ -543,6 +597,8 @@ class ServingFrontend:
             self.clock = max(now + 0.05, nxt)
         else:
             self.clock = now + res.elapsed
+        if self.telemetry is not None:
+            self.telemetry.on_step(self, self.clock, res.n_exec)
         return res.n_exec
 
     # ------------------------------------------------------------------ #
