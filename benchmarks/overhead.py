@@ -101,6 +101,56 @@ def run_prefill_fusion(prompt_len: int = 32, chunk: int = 16):
     assert reduction >= 2.0, ops
 
 
+def run_mla_prefill_fusion(prompt_len: int = 32, chunk: int = 16):
+    """MLA prefill-path op audit (PR 8): per traced latent-prefill chunk
+    the gather reference issues three paged-KV ops per MLA layer (ckv
+    scatter + krope scatter + latent slab attention); the fused kernel
+    issues ONE — in-kernel latent page writes + absorbed two-term
+    attention over the paged latent history in one ``pallas_call``.
+    Streams must also be bit-identical across backends."""
+    import jax
+
+    import repro.models.attention as attention
+    from repro.configs import get_reduced
+    from repro.core.batch import Batch
+    from repro.core.slo import StageKind
+    from repro.models import init_params
+    from repro.serving.engine import EngineConfig, ServingEngine
+
+    cfg = get_reduced("deepseek-v2-236b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(1, cfg.vocab, prompt_len).tolist()
+    ops, streams = {}, {}
+    for impl in ("gather", "fused"):
+        attention.PAGED_PREFILL_IMPL = impl
+        try:
+            eng = ServingEngine(cfg, params,
+                                EngineConfig(max_slots=4, max_len=128,
+                                             total_pages=64))
+            eng.add_request(1, prompt, expected_total=prompt_len + 8)
+            out = []
+            for _ in range(prompt_len // chunk):
+                b = Batch()
+                b.add(1, StageKind.PREFILL, chunk)
+                out += eng.execute(b).get(1, [])
+            b = Batch()
+            b.add(1, StageKind.DECODE, 4)
+            out += eng.execute(b).get(1, [])
+            c = eng.counters
+            ops[impl] = (c["prefill_scatter_ops"] + c["prefill_attn_ops"]
+                         + c["prefill_fused_ops"])
+            streams[impl] = out
+        finally:
+            attention.PAGED_PREFILL_IMPL = "auto"
+    assert streams["gather"] == streams["fused"], "MLA backends diverge"
+    reduction = ops["gather"] / max(ops["fused"], 1)
+    emit("mla_prefill_fused_op_reduction", reduction,
+         f"gather_ops={ops['gather']};fused_ops={ops['fused']};"
+         f"chunks={prompt_len // chunk};target>=2x")
+    assert reduction >= 2.0, ops
+
+
 def run_verify_fusion(sl: int = 3, rounds: int = 4):
     """Verify-path op audit for the fused multi-token verify step: the
     target's verify of ``sl`` drafts + 1 bonus token IS a chunked prefill
@@ -161,4 +211,5 @@ if __name__ == "__main__":
     run()
     run_engine_device_calls()
     run_prefill_fusion()
+    run_mla_prefill_fusion()
     run_verify_fusion()

@@ -1,0 +1,150 @@
+"""Mesh-sharded serving throughput: tokens/s/chip vs. mesh size (PR 8).
+
+Drives the REAL paged engine over 1/2/4-device serving meshes on the
+``live-mixed`` request mix and reports decode+prefill tokens per second
+per chip.  On a forced-host-device CPU mesh the per-chip number DEGRADES
+with mesh size (the "devices" share one socket and pay real collective
+overhead) — the point of the harness is (a) the scaling curve shape on
+real multi-chip hardware and (b) the embedded correctness gate: every
+mesh size must reproduce the single-device greedy streams bit-for-bit.
+
+``--smoke`` (CI nightly) runs mesh 1 vs 2 with a handful of requests and
+asserts stream identity; results ride ``BenchReport`` so
+``REPRO_BENCH_JSON=BENCH_shard.json`` captures the table.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _force_host_devices(n: int = 4) -> None:
+    """Must run before jax is first imported anywhere in the process."""
+    if "jax" in sys.modules:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = \
+            (flags + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+def _live_mixed_lens(n_requests: int, seed: int = 0):
+    """(prompt_len, output_len) pairs from the live-mixed generator,
+    clipped to the benchmark engine's slot geometry."""
+    from repro.core.workload import generate_workload
+    lens = []
+    reqs = []
+    rate, duration = 4.0, float(n_requests)
+    while len(reqs) < n_requests:        # Poisson draw may under-shoot
+        reqs = generate_workload("live-mixed", rate, duration, seed=seed)
+        duration *= 2
+    for r in reqs[:n_requests]:
+        p = min(max(r.stages[0].length, 8), 48)
+        d = min(max(r.stages[1].length, 4), 24)
+        lens.append((p, d))
+    return lens
+
+
+def _serve(cfg, params, mesh, lens, chunk: int = 16):
+    """Serve every request (chunked prefill + per-wave grouped decode),
+    returning (streams, wall_seconds, total_tokens)."""
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.core.batch import Batch
+    from repro.core.slo import StageKind
+    from repro.serving.engine import EngineConfig, ServingEngine
+
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_slots=4, max_len=128, total_pages=128, mesh=mesh))
+    rng = np.random.default_rng(11)
+    prompts = {rid: rng.integers(1, cfg.vocab, p).tolist()
+               for rid, (p, _) in enumerate(lens)}
+    streams = {rid: [] for rid in prompts}
+    total = 0
+    t0 = time.perf_counter()
+    wave = 4
+    for w0 in range(0, len(lens), wave):
+        live = {}
+        for rid in range(w0, min(w0 + wave, len(lens))):
+            p, d = lens[rid]
+            assert eng.add_request(rid, prompts[rid], expected_total=p + d)
+            for c0 in range(0, p, chunk):
+                b = Batch()
+                b.add(rid, StageKind.PREFILL, min(chunk, p - c0))
+                streams[rid] += eng.execute(b).get(rid, [])
+            total += p
+            live[rid] = d - len(streams[rid])
+        while any(n > 0 for n in live.values()):
+            b = Batch()
+            for rid, n in live.items():
+                if n > 0:
+                    b.add(rid, StageKind.DECODE, min(8, n))
+            out = eng.execute(b)
+            for rid in list(live):
+                got = out.get(rid, [])
+                streams[rid] += got
+                total += len(got)
+                live[rid] -= len(got)
+        for rid in live:
+            eng.finish(rid)
+    jax.block_until_ready(eng.kv.block_tables)
+    return streams, time.perf_counter() - t0, total
+
+
+def run(mesh_sizes=(1, 2, 4), n_requests: int = 12):
+    import dataclasses
+
+    import jax
+
+    from benchmarks.common import emit
+    from repro.configs import get_reduced
+    from repro.distributed.sharding import (make_serving_mesh,
+                                            serving_shard_plan)
+    from repro.models import init_params
+
+    # widened GQA reduction so 4-way head sharding divides (KVH % 4 == 0)
+    cfg = dataclasses.replace(get_reduced("qwen3-1.7b"),
+                              n_heads=8, n_kv_heads=4)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    lens = _live_mixed_lens(n_requests)
+    base = None
+    for n in mesh_sizes:
+        if n > jax.device_count():
+            emit(f"shard_tokens_per_s_chip_mesh{n}", 0.0,
+                 f"skipped:device_count={jax.device_count()}")
+            continue
+        mesh = None if n == 1 else make_serving_mesh(jax.devices()[:n])
+        plan = (serving_shard_plan(cfg, mesh, "model", max_seqs=4)
+                if mesh is not None else None)
+        streams, dt, total = _serve(cfg, params, mesh, lens)
+        if base is None:
+            base = streams
+        # correctness gate: sharding must never change a single token
+        assert streams == base, f"mesh {n} diverged from single-device"
+        emit(f"shard_tokens_per_s_chip_mesh{n}", total / dt / n,
+             f"tokens={total};wall_s={dt:.2f};chips={n};"
+             f"plan={'-' if plan is None else plan}")
+    return base
+
+
+def run_smoke(n_requests: int = 6):
+    """CI nightly gate: 1 vs 2-way mesh, streams bit-identical."""
+    return run(mesh_sizes=(1, 2), n_requests=n_requests)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--devices", type=int, default=4,
+                    help="forced host device count (CPU runs)")
+    args = ap.parse_args()
+    _force_host_devices(args.devices)
+    if args.smoke:
+        run_smoke(min(args.requests, 6))
+    else:
+        run(n_requests=args.requests)

@@ -28,7 +28,9 @@ from repro.core.perf_model import PerfModel
 from repro.core.request import Request
 from repro.core.slo import StageKind
 from repro.core.spec_planner import (AcceptanceEstimator, acc_len,
-                                     plan_speculation, strengthen_slo)
+                                     plan_speculation,
+                                     plan_speculation_requests,
+                                     strengthen_slo)
 
 
 def _default_spec_alpha() -> Optional[float]:
@@ -301,16 +303,19 @@ class SLOsServeScheduler:
             has_prefill = any(p["rem"] > 0 for p in prefills)
             if not active and not has_prefill:
                 break
-            spec_lens = None
+            # Per-REQUEST draft lengths: each active decode plans at its
+            # own strengthened TPOT and class alpha, so a fallen-behind
+            # request in the same tier can draft deeper than its peers
+            # instead of dragging the whole tier to its pace.
+            sl_of = None
             if active:
-                counts = [0] * len(tiers)
-                for j in active:
-                    counts[j.tier] += 1
                 if alphas is not None:
-                    m_tiers = [x * cfg.spec_margin for x in tiers]
-                    sp = plan_speculation(counts, m_tiers, perf, alphas)
+                    r_tpots = [j.tpot * cfg.spec_margin for j in active]
+                    r_alphas = [alpha_of[j.tier] for j in active]
+                    sp = plan_speculation_requests(r_tpots, r_alphas, perf)
                     if sp is not None and any(sp.spec_lens) and sp.batch_time > 0:
-                        spec_lens = sp.spec_lens
+                        sl_of = {id(j): sp.spec_lens[i]
+                                 for i, j in enumerate(active)}
                         t0 = sp.batch_time
                     else:
                         t0 = min(j.tpot for j in active)
@@ -334,7 +339,7 @@ class SLOsServeScheduler:
             if next_ddl < t + t0:
                 t0 = max(next_ddl - t, floor)
             end = t + t0
-            spec_step = max(spec_lens) if spec_lens else 0
+            spec_step = max(sl_of.values()) if sl_of else 0
             budget = perf.time2bs(t0, spec_step=spec_step)
             b = Batch(est_duration=t0, spec_step=spec_step)
 
@@ -345,7 +350,7 @@ class SLOsServeScheduler:
                 j = jobs.get(jid)
                 if j is None or j.remaining <= 0 or j.active_from > t + 1e-9:
                     continue
-                per = (spec_lens[j.tier] + 1) if spec_lens else 1
+                per = (sl_of.get(jid, 0) + 1) if sl_of else 1
                 take = int(min(per, math.ceil(j.remaining), budget))
                 if take <= 0:
                     requeue.append((ddl, jid))
@@ -356,7 +361,7 @@ class SLOsServeScheduler:
                 # Acc(take-1) tokens in expectation (§3.2.3 / App. D),
                 # at the job's own class acceptance estimate
                 emitted = (acc_len(take - 1, alpha_of[j.tier])
-                           if spec_lens else float(take))
+                           if sl_of else float(take))
                 j.remaining -= emitted
                 if j.remaining > 0:
                     heapq.heappush(heap, (ddl + j.tpot * emitted, jid))
@@ -389,7 +394,7 @@ class SLOsServeScheduler:
             # (running ahead of a deadline is always SLO-safe and frees
             # KV memory sooner — crucial for long-decode workloads where
             # memory, not compute, caps concurrency)
-            if budget > 0 and not spec_lens:
+            if budget > 0 and not sl_of:
                 active2 = [j for j in jobs.values()
                            if j.active_from <= t + 1e-9 and j.remaining > 0]
                 while budget > 0 and active2:

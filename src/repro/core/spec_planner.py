@@ -100,6 +100,70 @@ def plan_speculation(tier_counts: Sequence[int], tiers: Sequence[float],
     return best
 
 
+@dataclasses.dataclass(frozen=True)
+class RequestSpecPlan:
+    spec_lens: tuple[int, ...]       # drafted tokens per REQUEST
+    batch_time: float
+    prefill_budget_per_batch: float
+    prefill_tpt: float
+
+    @property
+    def spec_step(self) -> int:
+        return max(self.spec_lens) if self.spec_lens else 0
+
+
+def plan_speculation_requests(tpots: Sequence[float],
+                              alphas: Sequence[float], perf: PerfModel,
+                              max_sl: int = MAX_SPEC_LEN
+                              ) -> Optional[RequestSpecPlan]:
+    """Per-request speculation lengths; None if no feasible plan.
+
+    Finer than :func:`plan_speculation`: two requests in the same TPOT
+    tier can still differ — dynamic SLO strengthening (§3.2.3) gives a
+    fallen-behind request a tighter effective TPOT, and per-class alphas
+    drift independently.  Rather than enumerating (max_sl+1)^R
+    assignments, observe that for a fixed batch time T each request
+    independently wants the MINIMAL sl_r with
+
+        tpot_r * acc_len(sl_r, alpha_r) >= T
+
+    (a longer draft only adds verify tokens and can only raise
+    spec_step, shrinking the token budget at the same T), and the
+    achievable batch times form the finite grid
+    {tpot_r * acc_len(s, alpha_r)}.  Scanning that grid with minimal
+    assignments dominates exhaustive enumeration — the property test
+    checks this against brute force on small instances.
+    """
+    R = len(tpots)
+    assert len(alphas) == R
+    if R == 0:
+        return RequestSpecPlan((), 0.0, 0.0, math.inf)
+    cands = sorted({tpots[r] * acc_len(s, alphas[r])
+                    for r in range(R) for s in range(max_sl + 1)})
+    best: Optional[RequestSpecPlan] = None
+    for T in cands:
+        sls = []
+        for r in range(R):
+            sl = next((s for s in range(max_sl + 1)
+                       if tpots[r] * acc_len(s, alphas[r]) >= T - 1e-12),
+                      None)
+            if sl is None:
+                break
+            sls.append(sl)
+        if len(sls) < R:
+            continue
+        spec_step = max(sls)
+        cap = perf.time2bs(T, spec_step=spec_step)
+        pb = cap - sum(s + 1 for s in sls)
+        if pb < 0:
+            continue
+        tpt = pb / T if T > 0 else 0.0
+        if best is None or tpt > best.prefill_tpt:
+            best = RequestSpecPlan(tuple(int(s) for s in sls), float(T),
+                                   float(pb), tpt)
+    return best
+
+
 class AcceptanceEstimator:
     """Per-SLO-class EWMA of observed draft-acceptance rates.
 

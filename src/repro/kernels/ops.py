@@ -13,7 +13,8 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_bh
 from repro.kernels.paged_attention import paged_decode_attention
-from repro.kernels.paged_prefill import (paged_prefill_attention,
+from repro.kernels.paged_prefill import (mla_paged_prefill_attention,
+                                         paged_prefill_attention,
                                          paged_verify_attention)
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -109,6 +110,23 @@ def paged_verify(q, k_new, v_new, k_pages, v_pages, block_table, pos0,
                                   chunk_len.astype(jnp.int32),
                                   scale=scale, window=window,
                                   interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("scale", "interpret"))
+def mla_paged_prefill(q_lat, q_rope, ckv_new, krope_new, ckv_pages,
+                      krope_pages, block_table, pos0, chunk_len, *,
+                      scale: float, interpret: bool = None):
+    """Fused MLA chunked prefill: writes the chunk's ckv/krope latents
+    into pool pages in-kernel and attends over the paged latent history
+    in the same (absorbed, latent-space) pass.  q_lat: (B,S,H,r) =
+    q_nope·w_uk; q_rope: (B,S,H,rope); ckv_new: (B,S,r); krope_new:
+    (B,S,rope); pools: (n_pages,page,r|rope).  Returns (ctx_lat,
+    ckv_pages', krope_pages'); the caller up-projects through w_uv."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return mla_paged_prefill_attention(
+        q_lat, q_rope, ckv_new, krope_new, ckv_pages, krope_pages,
+        block_table.astype(jnp.int32), pos0.astype(jnp.int32),
+        chunk_len.astype(jnp.int32), scale=scale, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

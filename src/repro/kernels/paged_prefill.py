@@ -175,6 +175,136 @@ def paged_prefill_attention(q, k_new, v_new, k_pages, v_pages, block_table,
     )(block_table, pos0, chunk_len, q, k_new, v_new, k_pages, v_pages)
 
 
+def _mla_prefill_kernel(table_ref, pos0_ref, clen_ref, ql_ref, qr_ref,
+                        cn_ref, rn_ref, cp_in_ref, rp_in_ref, o_ref,
+                        cp_ref, rp_ref, *, scale: float, max_pages: int,
+                        page: int, n_heads: int, S: int):
+    """MLA latent-space analogue of :func:`_prefill_kernel`.
+
+    The paged history is HEADLESS — one (kv_lora_rank,) latent vector plus
+    one (rope_hd,) decoupled-rope key per token, shared by every query
+    head — so phase 1 writes ``ckv``/``krope`` rows (no head axis) and
+    phase 2 runs the flash loop with all ``S * H`` query rows folded onto
+    the single latent "kv head" (row r is query position ``r // H``).
+    Queries arrive pre-absorbed: ``q_lat = q_nope · w_uk`` lives in latent
+    space, so per-page logits are the two-term sum
+    ``q_lat · ckv + q_rope · krope`` and the context accumulates in latent
+    space; the caller up-projects through ``w_uv`` afterwards."""
+    b = pl.program_id(0)
+    pos0 = pos0_ref[b]
+    n_tok = clen_ref[b]
+
+    # ---- phase 1: write the chunk's latent rows into the lane's pages ----
+    cn = cn_ref[0]                                       # (S, r)
+    rn = rn_ref[0]                                       # (S, rope)
+    w_lo = pos0 // page
+    w_hi = jnp.where(n_tok > 0, (pos0 + n_tok - 1) // page + 1, w_lo)
+
+    def write_body(j, carry):
+        pid = table_ref[b, j]
+        rows = j * page + jax.lax.iota(jnp.int32, page)
+        valid = (rows >= pos0) & (rows < pos0 + n_tok)
+        src = jnp.clip(rows - pos0, 0, S - 1)
+        old_c = cp_ref[pl.dslice(pid, 1)][0]             # (page, r)
+        old_r = rp_ref[pl.dslice(pid, 1)][0]
+        new_c = jnp.take(cn, src, axis=0).astype(old_c.dtype)
+        new_r = jnp.take(rn, src, axis=0).astype(old_r.dtype)
+        m = valid[:, None]
+        cp_ref[pl.dslice(pid, 1)] = jnp.where(m, new_c, old_c)[None]
+        rp_ref[pl.dslice(pid, 1)] = jnp.where(m, new_r, old_r)[None]
+        return carry
+
+    jax.lax.fori_loop(w_lo, w_hi, write_body, 0)
+
+    # ---- phase 2: flash attention over the lane's paged latents ----
+    ql = ql_ref[0].astype(jnp.float32)                   # (S, H, r)
+    qr = qr_ref[0].astype(jnp.float32)                   # (S, H, rope)
+    r, rope = ql.shape[-1], qr.shape[-1]
+    ql = ql.reshape(S * n_heads, r)
+    qr = qr.reshape(S * n_heads, rope)
+    kv_len = pos0 + n_tok
+    q_pos = pos0 + jax.lax.broadcasted_iota(
+        jnp.int32, (S * n_heads, page), 0) // n_heads
+
+    def attn_body(i, carry):
+        m, l, acc = carry
+        ck = cp_ref[pl.dslice(table_ref[b, i], 1)][0].astype(jnp.float32)
+        rk = rp_ref[pl.dslice(table_ref[b, i], 1)][0].astype(jnp.float32)
+        s = (jnp.einsum("nr,pr->np", ql, ck)
+             + jnp.einsum("nc,pc->np", qr, rk)) * scale  # (S*H, page)
+        k_pos = i * page + jax.lax.broadcasted_iota(
+            jnp.int32, (S * n_heads, page), 1)
+        valid = (k_pos < kv_len) & (k_pos <= q_pos)
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum("np,pr->nr", p, ck)
+        return m_new, l_new, acc_new
+
+    a_hi = jnp.minimum((kv_len + page - 1) // page, max_pages)
+    m0 = jnp.full((S * n_heads, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((S * n_heads, 1), jnp.float32)
+    a0 = jnp.zeros((S * n_heads, r), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, a_hi, attn_body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)                    # (S*H, r)
+    o_ref[0] = out.reshape(S, n_heads, r).astype(o_ref.dtype)
+
+
+def mla_paged_prefill_attention(q_lat, q_rope, ckv_new, krope_new,
+                                ckv_pages, krope_pages, block_table,
+                                pos0, chunk_len, *, scale: float,
+                                interpret: bool = True):
+    """Fused MLA chunked prefill with in-kernel latent page writes.
+
+    q_lat: (B, S, H, r) absorbed queries (``q_nope · w_uk``); q_rope:
+    (B, S, H, rope); ckv_new: (B, S, r) / krope_new: (B, S, rope) — the
+    chunk's fresh latents; ckv_pages: (n_pages, page, r) / krope_pages:
+    (n_pages, page, rope).  Same write-mask contract as
+    :func:`paged_prefill_attention`.  Returns (ctx_lat (B, S, H, r),
+    ckv_pages', krope_pages'); the caller applies ``w_uv``/``wo``.
+    MLA has no sliding window, so none is supported here.
+    """
+    B, S, H, r = q_lat.shape
+    rope = q_rope.shape[-1]
+    _, page, _ = ckv_pages.shape
+    max_pages = block_table.shape[1]
+
+    kernel = functools.partial(
+        _mla_prefill_kernel, scale=scale, max_pages=max_pages, page=page,
+        n_heads=H, S=S)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,          # block_table, pos0, chunk_len
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, S, H, r), lambda b, *_: (b, 0, 0, 0)),
+            pl.BlockSpec((1, S, H, rope), lambda b, *_: (b, 0, 0, 0)),
+            pl.BlockSpec((1, S, r), lambda b, *_: (b, 0, 0)),
+            pl.BlockSpec((1, S, rope), lambda b, *_: (b, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),           # ckv_pages (HBM)
+            pl.BlockSpec(memory_space=pl.ANY),           # krope_pages (HBM)
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, H, r), lambda b, *_: (b, 0, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, r), q_lat.dtype),
+            jax.ShapeDtypeStruct(ckv_pages.shape, ckv_pages.dtype),
+            jax.ShapeDtypeStruct(krope_pages.shape, krope_pages.dtype),
+        ],
+        # operands 0-2 are the scalar-prefetch args; pools are 7/8
+        input_output_aliases={7: 1, 8: 2},
+        interpret=interpret,
+    )(block_table, pos0, chunk_len, q_lat, q_rope, ckv_new, krope_new,
+      ckv_pages, krope_pages)
+
+
 def paged_verify_attention(q, k_new, v_new, k_pages, v_pages, block_table,
                            pos0, chunk_len, *, scale: float = None,
                            window: Optional[int] = None,

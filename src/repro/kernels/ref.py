@@ -118,3 +118,43 @@ def ref_ssd(xh, dt, A, Bm, Cm, init_state=None):
         h = h * dA[..., None, None] + dBx
         ys.append(jnp.einsum("bn,bhpn->bhp", Cm[:, t].astype(jnp.float32), h))
     return jnp.stack(ys, axis=1), h
+
+
+def ref_mla_paged_prefill(q_lat, q_rope, ckv_new, krope_new, ckv_pages,
+                          krope_pages, block_table, pos0, chunk_len, *,
+                          scale):
+    """Unfused oracle for the MLA latent-page prefill kernel: scatter the
+    chunk's latent rows into the pages, gather each lane's logical latent
+    stream, run the two-term (nope + rope) masked attention in latent
+    space (absorbed math — no per-head K/V ever materializes).
+
+    q_lat: (B, S, H, r); q_rope: (B, S, H, rope); ckv_new: (B, S, r);
+    krope_new: (B, S, rope); ckv/krope_pages: (n_pages, page, r|rope);
+    block_table: (B, max_pages); pos0/chunk_len: (B,) int32.
+    Returns (ctx_lat, ckv_pages', krope_pages'), ctx_lat (B, S, H, r).
+    """
+    B, S, H, r = q_lat.shape
+    n_pages, page, _ = ckv_pages.shape
+    max_pages = block_table.shape[1]
+    cp, rp = ckv_pages, krope_pages
+    for b in range(B):
+        for i in range(int(chunk_len[b])):
+            p = int(pos0[b]) + i
+            pid = int(block_table[b, p // page])
+            cp = cp.at[pid, p % page].set(ckv_new[b, i].astype(cp.dtype))
+            rp = rp.at[pid, p % page].set(krope_new[b, i].astype(rp.dtype))
+    out = []
+    for b in range(B):
+        cs = cp[block_table[b]].reshape(max_pages * page, r)
+        rs = rp[block_table[b]].reshape(max_pages * page, -1)
+        s = (jnp.einsum("qhr,sr->hqs", q_lat[b].astype(jnp.float32),
+                        cs.astype(jnp.float32))
+             + jnp.einsum("qhc,sc->hqs", q_rope[b].astype(jnp.float32),
+                          rs.astype(jnp.float32))) * scale
+        q_pos = int(pos0[b]) + jnp.arange(S)[:, None]
+        k_pos = jnp.arange(max_pages * page)[None, :]
+        mask = (k_pos < int(pos0[b]) + int(chunk_len[b])) & (k_pos <= q_pos)
+        s = jnp.where(mask[None], s, NEG_INF)
+        pw = jax.nn.softmax(s, axis=-1)
+        out.append(jnp.einsum("hqs,sr->qhr", pw, cs.astype(jnp.float32)))
+    return jnp.stack(out).astype(q_lat.dtype), cp, rp

@@ -343,7 +343,15 @@ def attn_forward(p, x, cfg: ModelConfig, *, positions, cache=None,
     return out, {"k": ck, "v": cv}
 
 
-def attn_output(p, ctx):
+def attn_output(p, ctx, shard=None):
+    """shard: serving ShardPlan inside shard_map — wq/wk/wv are column-
+    sharded on the head axis so ``ctx`` holds this shard's heads; the
+    full per-head context is re-assembled by CONCATENATION (all_gather,
+    bit-identical to the unsharded head order) before the replicated
+    ``wo`` contraction.  Cross-attention params stay replicated and pass
+    shard=None."""
+    if shard is not None and shard.heads:
+        ctx = jax.lax.all_gather(ctx, shard.axis, axis=2, tiled=True)
     out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
     if "bo" in p:
         out = out + p["bo"]
@@ -412,7 +420,7 @@ def init_mla(key, cfg: ModelConfig, dtype=jnp.float32):
 
 
 def mla_forward(p, x, cfg: ModelConfig, *, positions, cache=None, pos0=None,
-                block_tables=None, chunk_len=None):
+                block_tables=None, chunk_len=None, shard=None):
     """MLA: cache the compressed c_kv (kv_lora_rank) + shared rope key.
 
     Cache layout: {"ckv": (B,S,r), "krope": (B,S,rope_hd)} — this is the
@@ -420,6 +428,18 @@ def mla_forward(p, x, cfg: ModelConfig, *, positions, cache=None, pos0=None,
     Paged layout: {"ckv_pages": (P,page,r), "krope_pages": (P,page,rope_hd)}
     addressed via ``block_tables`` (the latent stream is paged exactly like
     GQA KV, just with vector-valued tokens).
+
+    Paged multi-token chunks dispatch per PAGED_PREFILL_IMPL: "fused" runs
+    the latent-space Pallas kernel (kernels/paged_prefill.py) that writes
+    the chunk's ckv/krope rows into pool pages in-kernel and attends over
+    the paged latent history in the same absorbed pass — one device op
+    where the gather reference issues three (2 latent scatters + a slab
+    attention).
+
+    shard: serving ShardPlan inside shard_map — q up-projections /
+    w_uk / w_uv are head-sharded while the latent pools stay replicated
+    (the ckv/krope streams are headless, every shard writes identical
+    rows); the per-head context is all-gathered before ``wo``.
     """
     c = cfg.mla
     B, Sq, _ = x.shape
@@ -441,10 +461,30 @@ def mla_forward(p, x, cfg: ModelConfig, *, positions, cache=None, pos0=None,
     if cache is not None and "ckv_pages" in cache:
         if chunk_len is None:
             chunk_len = jnp.full((B,), Sq, jnp.int32)
+        if Sq > 1 and _paged_prefill_impl() == "fused":
+            # fused latent-page prefill: in-kernel ckv/krope page writes +
+            # absorbed attention over the paged latent history in ONE
+            # pallas_call (the engine's CoW barrier ran before this call).
+            from repro.kernels import ops
+            OP_STATS["fused_prefill"] += 1
+            q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, p["w_uk"])
+            ctx_lat, cc, ck = ops.mla_paged_prefill(
+                q_lat, q_rope, ckv, krope, cache["ckv_pages"],
+                cache["krope_pages"], block_tables, pos0, chunk_len,
+                scale=(nope + rope_hd) ** -0.5)
+            ctx = jnp.einsum("bqhr,rhv->bqhv", ctx_lat.astype(x.dtype),
+                             p["w_uv"])
+            if shard is not None and shard.mla_heads:
+                ctx = jax.lax.all_gather(ctx, shard.axis, axis=2,
+                                         tiled=True)
+            out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+            return out, {"ckv_pages": cc, "krope_pages": ck}
         cc = paged_write(cache["ckv_pages"], ckv, block_tables, pos0,
                          chunk_len)
         ck = paged_write(cache["krope_pages"], krope, block_tables, pos0,
                          chunk_len)
+        if Sq > 1:
+            OP_STATS["prefill_attn"] += 1
         kv_len = pos0 + Sq
         new_cache = {"ckv_pages": cc, "krope_pages": ck}
         ckv_all = paged_gather(cc, block_tables).astype(x.dtype)
@@ -481,6 +521,8 @@ def mla_forward(p, x, cfg: ModelConfig, *, positions, cache=None, pos0=None,
         probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
         ctx_lat = jnp.einsum("bhqk,bkr->bqhr", probs, ckv_all)
         ctx = jnp.einsum("bqhr,rhv->bqhv", ctx_lat, p["w_uv"])
+        if shard is not None and shard.mla_heads:
+            ctx = jax.lax.all_gather(ctx, shard.axis, axis=2, tiled=True)
         out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
         return out, new_cache
     # naive path: expand keys/values from the latent
@@ -493,5 +535,7 @@ def mla_forward(p, x, cfg: ModelConfig, *, positions, cache=None, pos0=None,
     logits = jnp.where(mask, logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
     ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    if shard is not None and shard.mla_heads:
+        ctx = jax.lax.all_gather(ctx, shard.axis, axis=2, tiled=True)
     out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
     return out, new_cache

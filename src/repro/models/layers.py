@@ -66,7 +66,11 @@ def init_mlp(key, d_model: int, d_ff: int, act: str = "swiglu",
     return p
 
 
-def apply_mlp(p, x, act: str = "swiglu"):
+def apply_mlp(p, x, act: str = "swiglu", shard=None):
+    """shard: serving ShardPlan inside shard_map — w_gate/w_up/b_up are
+    column-sharded on d_ff, so the hidden activation is all-gathered (a
+    concatenation, bit-identical to the unsharded order) before the
+    replicated w_down contraction."""
     up = x @ p["w_up"]
     if "b_up" in p:
         up = up + p["b_up"]
@@ -74,6 +78,8 @@ def apply_mlp(p, x, act: str = "swiglu"):
         h = jax.nn.silu(x @ p["w_gate"]) * up
     else:
         h = jax.nn.gelu(up)
+    if shard is not None and shard.mlp:
+        h = jax.lax.all_gather(h, shard.axis, axis=h.ndim - 1, tiled=True)
     out = h @ p["w_down"]
     if "b_down" in p:
         out = out + p["b_down"]

@@ -59,12 +59,21 @@ def _expert_ffn(p, h_in):
 
 
 def moe_forward(p, x, cfg: ModelConfig, mode: str = "dispatch",
-                capacity_factor=None):
+                capacity_factor=None, shard=None):
     """Returns (out, aux) where aux carries load-balance terms.
 
     capacity_factor None -> 2.0 (training/dry-run default).  Any value
     >= n_experts/top_k makes dispatch provably dropless (C >= T), the
-    exact-inference setting used by the serving engine and tests."""
+    exact-inference setting used by the serving engine and tests.
+
+    shard: serving ShardPlan inside shard_map (expert parallel).  The
+    router is replicated so routing/keep decisions are globally exact;
+    each shard scatters only the units routed to ITS expert slice
+    (remote units scatter nothing via an out-of-bounds index + drop),
+    runs ``_expert_ffn`` over the local (E/n, C, D) buffer, and the
+    per-unit outputs are ``psum``'d — exactly one shard contributes a
+    non-zero value per unit, so with top-k <= 2 the combined sum is
+    bit-identical to the single-device scatter-add."""
     m = cfg.moe
     if capacity_factor is None:
         capacity_factor = 2.0
@@ -93,12 +102,28 @@ def moe_forward(p, x, cfg: ModelConfig, mode: str = "dispatch",
         pos_u = (jnp.cumsum(oh, axis=0) - oh)[jnp.arange(e_u.shape[0]), e_u]
         keep = pos_u < C
         pos_c = jnp.where(keep, pos_u, C - 1)
-        vals = xt[t_u] * keep[:, None].astype(x.dtype)
-        buf = jnp.zeros((E, C, D), x.dtype).at[e_u, pos_c].add(
-            vals, mode="drop")
-        eo = _expert_ffn(p, buf)                             # (E, C, D)
-        unit_out = eo[e_u, pos_c] * (w_u * keep.astype(x.dtype))[:, None]
-        out = jnp.zeros((T, D), x.dtype).at[t_u].add(unit_out, mode="drop")
+        if shard is not None and shard.experts:
+            El = E // shard.size                   # local expert slice
+            e_loc = e_u - jax.lax.axis_index(shard.axis) * El
+            local = keep & (e_loc >= 0) & (e_loc < El)
+            e_scat = jnp.where(local, e_loc, El)   # OOB index -> dropped
+            vals = xt[t_u] * local[:, None].astype(x.dtype)
+            buf = jnp.zeros((El, C, D), x.dtype).at[e_scat, pos_c].add(
+                vals, mode="drop")
+            eo = _expert_ffn(p, buf)               # (El, C, D)
+            unit_out = (eo[jnp.clip(e_loc, 0, El - 1), pos_c]
+                        * (w_u * local.astype(x.dtype))[:, None])
+            part = jnp.zeros((T, D), x.dtype).at[t_u].add(
+                unit_out, mode="drop")
+            out = jax.lax.psum(part, shard.axis)
+        else:
+            vals = xt[t_u] * keep[:, None].astype(x.dtype)
+            buf = jnp.zeros((E, C, D), x.dtype).at[e_u, pos_c].add(
+                vals, mode="drop")
+            eo = _expert_ffn(p, buf)                         # (E, C, D)
+            unit_out = eo[e_u, pos_c] * (w_u * keep.astype(x.dtype))[:, None]
+            out = jnp.zeros((T, D), x.dtype).at[t_u].add(
+                unit_out, mode="drop")
 
     if m.n_shared:
         sh = jax.nn.silu(xt @ p["shared_gate"]) * (xt @ p["shared_up"])

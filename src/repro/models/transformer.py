@@ -58,8 +58,16 @@ def init_block(key, kind: str, cfg: ModelConfig, dtype=jnp.float32):
 
 def block_forward(p, kind: str, cfg: ModelConfig, x, *, positions,
                   cache=None, pos0=None, enc_kv=None, moe_cf=None,
-                  block_tables=None, chunk_len=None, verify=False):
-    """Returns (x, new_cache, aux_loss)."""
+                  block_tables=None, chunk_len=None, verify=False,
+                  shard=None):
+    """Returns (x, new_cache, aux_loss).
+
+    shard: serving ShardPlan when executing inside the engine's
+    shard_map (distributed/sharding.py) — attention heads / MoE experts
+    / dense-FFN hidden run shard-local, everything else replicated.
+    Cross-attention params stay replicated (shard is not forwarded)."""
+    if kind == "cross_attn":
+        shard = None            # whole block replicates (serving specs)
     aux = jnp.zeros((), jnp.float32)
     if kind == "ssm":
         h = apply_norm(p["norm1"], x, cfg.norm)
@@ -77,14 +85,14 @@ def block_forward(p, kind: str, cfg: ModelConfig, x, *, positions,
         y, new_self = mla_forward(p["attn"], h, cfg, positions=positions,
                                   cache=self_cache, pos0=pos0,
                                   block_tables=block_tables,
-                                  chunk_len=chunk_len)
+                                  chunk_len=chunk_len, shard=shard)
     else:
         self_cache = cache.get("self") if cache else None
         ctx, new_self = attn_forward(p["attn"], h, cfg, positions=positions,
                                      cache=self_cache, pos0=pos0,
                                      block_tables=block_tables,
                                      chunk_len=chunk_len, verify=verify)
-        y = attn_output(p["attn"], ctx)
+        y = attn_output(p["attn"], ctx, shard=shard)
     x = x + y.astype(x.dtype)
     if kind == "cross_attn":
         hx = apply_norm(p["norm_x"], x, cfg.norm)
@@ -93,10 +101,10 @@ def block_forward(p, kind: str, cfg: ModelConfig, x, *, positions,
     h2 = apply_norm(p["norm2"], x, cfg.norm)
     if kind in MOE_KINDS:
         y2, moe_aux = moe_forward(p["moe"], h2, cfg,
-                                  capacity_factor=moe_cf)
+                                  capacity_factor=moe_cf, shard=shard)
         aux = aux + moe_aux["aux_loss"]
     else:
-        y2 = apply_mlp(p["mlp"], h2, cfg.act)
+        y2 = apply_mlp(p["mlp"], h2, cfg.act, shard=shard)
     new_cache = {"self": new_self} if cache is not None else None
     return x + y2.astype(x.dtype), new_cache, aux
 
@@ -229,12 +237,15 @@ def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
 # ---------------------------- full forward ----------------------------- #
 def model_forward(params, cfg: ModelConfig, tokens_or_embeds, *,
                   cache=None, pos0=None, enc_states=None, moe_cf=None,
-                  block_tables=None, chunk_len=None, verify=False):
+                  block_tables=None, chunk_len=None, verify=False,
+                  shard=None):
     """Returns (hidden (B,S,D), new_cache, aux_loss).
 
     block_tables: (B, max_pages) per-lane page tables when ``cache`` holds
     paged pools (init_paged_cache); chunk_len: (B,) true chunk lengths so
     padded positions are never written into pages.
+    shard: serving ShardPlan when tracing inside the engine's shard_map;
+    None (default) is the unsharded single-device path.
     """
     if tokens_or_embeds.dtype in (jnp.int32, jnp.int64):
         x = embed(params["embed"], tokens_or_embeds)
@@ -263,7 +274,7 @@ def model_forward(params, cfg: ModelConfig, tokens_or_embeds, *,
                 p, "shared_attn", cfg, x, positions=positions,
                 cache=seg_c, pos0=pos0_arr, enc_kv=None, moe_cf=moe_cf,
                 block_tables=block_tables, chunk_len=chunk_len,
-                verify=verify)
+                verify=verify, shard=shard)
             aux_total += aux
             if cache is not None:
                 new_caches.append(c_new)
@@ -279,7 +290,7 @@ def model_forward(params, cfg: ModelConfig, tokens_or_embeds, *,
                 p, kind, cfg, x, positions=positions, cache=seg_c,
                 pos0=pos0_arr, enc_kv=enc_kv, moe_cf=moe_cf,
                 block_tables=block_tables, chunk_len=chunk_len,
-                verify=verify)
+                verify=verify, shard=shard)
             aux_total += aux
             if cache is not None:
                 new_caches.append(c_new)
@@ -294,7 +305,7 @@ def model_forward(params, cfg: ModelConfig, tokens_or_embeds, *,
                     p_l, kind, cfg, xx, positions=positions, cache=c_l,
                     pos0=pos0_arr, enc_kv=ekv, moe_cf=moe_cf,
                     block_tables=block_tables, chunk_len=chunk_len,
-                    verify=verify)
+                    verify=verify, shard=shard)
                 return xx, (c_new, aux)
             if cfg.remat and cache is None:
                 # checkpoint each layer: backward recomputes the block

@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -131,7 +132,9 @@ class ClusterFrontend:
               spec_alpha: Optional[float] = None,
               share_prefix: bool = True,
               token_level_prefix: bool = True,
-              telemetry=None) -> "ClusterFrontend":
+              telemetry=None, mesh=None,
+              devices_per_replica: int = None,
+              shard_axes: str = "model") -> "ClusterFrontend":
         """Carve ``total_pages`` (one shared budget) into per-replica paged
         KV pools and stand up N real engines over shared ``params``.
         ``replica_pages`` defaults to an even split; setting it higher lets
@@ -146,7 +149,15 @@ class ClusterFrontend:
         plan to observed acceptance.
 
         ``telemetry`` is a ``ClusterTelemetry``, a bool forcing metrics
-        on/off regardless of ``REPRO_METRICS``, or None (env default)."""
+        on/off regardless of ``REPRO_METRICS``, or None (env default).
+
+        Mesh-sharded replicas: ``mesh`` runs EVERY replica's engine over
+        that one mesh (shard_map tensor/expert parallel);
+        ``devices_per_replica=k`` instead carves ``jax.devices()`` into
+        contiguous k-device slices and gives replica i slice ``i % n``
+        (its own mesh over ``shard_axes``) — e.g. 2 replicas x 2 devices
+        on a forced 4-device host is the CI "2x2" leg.  Autoscaler-grown
+        replicas reuse the slices round-robin."""
         budget = SharedPageBudget(total_pages)
         if replica_pages is None:
             replica_pages = max(1, total_pages // n_replicas)
@@ -154,18 +165,28 @@ class ClusterFrontend:
             spec_alpha = 0.7
         if not isinstance(telemetry, ClusterTelemetry):
             telemetry = ClusterTelemetry(enabled=telemetry)
+        meshes = None
+        if devices_per_replica is not None:
+            from repro.distributed.sharding import make_serving_mesh
+            devs = jax.devices()
+            n_slices = max(1, len(devs) // devices_per_replica)
+            meshes = [make_serving_mesh(
+                devs[j * devices_per_replica:(j + 1) * devices_per_replica],
+                axis=shard_axes) for j in range(n_slices)]
 
         def make_driver(i: int) -> ReplicaDriver:
             """Spawn replica ``i`` — also the autoscaler's grow path, so
             added replicas are configured exactly like the initial pool
             (same shared budget, params, and scheduler config)."""
+            rep_mesh = mesh if meshes is None else meshes[i % len(meshes)]
             eng = ServingEngine(
                 model_cfg, params,
                 EngineConfig(max_slots=max_slots, max_len=max_len,
                              page_size=page_size, total_pages=replica_pages,
                              dtype=dtype, seed=seed + i,
                              share_prefix=share_prefix,
-                             token_level_prefix=token_level_prefix),
+                             token_level_prefix=token_level_prefix,
+                             mesh=rep_mesh, shard_axes=shard_axes),
                 draft=draft, kv_budget=budget)
             kw = dict(page_size=page_size, prefill_emits_first_token=True)
             if spec_alpha is not None:

@@ -88,6 +88,14 @@ class EngineConfig:
     # shaved reservation extends on demand (with the usual best-effort
     # preemption pressure valve) — more admissions, some thrash risk.
     prefix_aware_admission: bool = False
+    # Mesh-sharded serving: a jax.sharding.Mesh makes this engine execute
+    # its three jitted programs under shard_map over ``shard_axes`` —
+    # head-sharded GQA attention, expert-parallel MoE, column-sharded
+    # dense FFN, lane-sharded at-rest SSM state (what actually shards is
+    # divisibility-gated per model; see distributed/sharding.
+    # serving_shard_plan).  None = single-device (unchanged path).
+    mesh: object = None
+    shard_axes: str = "model"
 
 
 @dataclasses.dataclass
@@ -128,13 +136,34 @@ class ServingEngine:
         self.key = jax.random.PRNGKey(self.ecfg.seed)
         self._moe_cf = (float(cfg.moe.n_experts) / cfg.moe.top_k
                         if cfg.moe else None)
+        # Mesh-sharded serving: place params + at-rest pools per the
+        # serving shard plan and wrap the three jitted programs in
+        # shard_map.  The plan is read by model_forward (shard=...) at
+        # trace time, so the one-scan-per-decode-group and one-host-sync
+        # contracts hold per shard by construction.
+        self.mesh = self.ecfg.mesh
+        self._shard_plan = None
+        if self.mesh is not None:
+            from repro.distributed import sharding as shd
+            self._shard_plan = shd.serving_shard_plan(
+                cfg, self.mesh, self.ecfg.shard_axes,
+                max_seqs=self.ecfg.max_slots)
+            self.params = jax.device_put(
+                self.params, shd.tree_named(
+                    self.mesh, shd.serving_param_specs(
+                        self.params, cfg, self._shard_plan)))
+            self.kv.place(self.mesh, self._shard_plan)
         # cache args are donated: PagedKVManager.absorb replaces the pools
         # right after each call, so XLA may update pages in place instead
         # of copying the whole KV budget per step
-        self._prefill = jax.jit(self._prefill_forward, donate_argnums=(2,))
-        self._decode = jax.jit(self._decode_scan, donate_argnums=(1,),
-                               static_argnames=("n_steps",))
-        self._verify = jax.jit(self._verify_forward, donate_argnums=(2,))
+        if self.mesh is None:
+            self._prefill = jax.jit(self._prefill_forward,
+                                    donate_argnums=(2,))
+            self._decode = jax.jit(self._decode_scan, donate_argnums=(1,),
+                                   static_argnames=("n_steps",))
+            self._verify = jax.jit(self._verify_forward, donate_argnums=(2,))
+        else:
+            self._build_sharded_programs()
         self.counters = {"prefill_calls": 0, "decode_calls": 0,
                          "decode_tokens": 0, "spec_draft_calls": 0,
                          "spec_verify_calls": 0, "preemptions": 0,
@@ -176,6 +205,52 @@ class ServingEngine:
             self.spec = SpecDecoder(self, draft[0], draft[1])
 
     # ------------------------- jitted programs -------------------------- #
+    def _build_sharded_programs(self):
+        """Wrap the three jitted programs in shard_map over the serving
+        mesh.  Params / pools arrive pre-placed (NamedShardings matching
+        these specs), so jit inserts no resharding; everything else —
+        tokens, positions, block tables, RNG keys, emitted tokens — is
+        replicated, which keeps sampling identical on every shard and the
+        single host sync per group intact.  check_rep=False: replication
+        of the outputs is by construction (identical math per shard), not
+        statically inferrable through pallas/scatter ops."""
+        import functools
+
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed import sharding as shd
+
+        plan = self._shard_plan
+        pspec = shd.serving_param_specs(self.params, self.cfg, plan)
+        cspec = shd.serving_cache_specs(self.kv.pools, self.cfg, plan,
+                                        lane_view=True)
+        rep = P()
+        smap = functools.partial(shard_map, mesh=self.mesh,
+                                 check_rep=False)
+        self._prefill = jax.jit(
+            smap(self._prefill_forward,
+                 in_specs=(pspec, rep, cspec, rep, rep, rep, rep, rep),
+                 out_specs=(rep, cspec)),
+            donate_argnums=(2,))
+        self._verify = jax.jit(
+            smap(self._verify_forward,
+                 in_specs=(pspec, rep, cspec, rep, rep, rep, rep),
+                 out_specs=(rep, cspec)),
+            donate_argnums=(2,))
+
+        def _decode_sharded(params, cache, tokens0, pos0, steps, eos, bt,
+                            enc_states, key, *, n_steps):
+            fn = smap(functools.partial(self._decode_scan, n_steps=n_steps),
+                      in_specs=(pspec, cspec, rep, rep, rep, rep, rep,
+                                rep, rep),
+                      out_specs=(cspec, rep, rep, rep))
+            return fn(params, cache, tokens0, pos0, steps, eos, bt,
+                      enc_states, key)
+
+        self._decode = jax.jit(_decode_sharded, donate_argnums=(1,),
+                               static_argnames=("n_steps",))
+
     def _prefill_forward(self, params, tokens, cache, pos0, true_len, bt,
                          enc_states, keys):
         """One lane-batched chunk group: each lane writes its chunk's KV
@@ -185,7 +260,8 @@ class ServingEngine:
         h, cache, _ = model_forward(params, self.cfg, tokens, cache=cache,
                                     pos0=pos0, enc_states=enc_states,
                                     moe_cf=self._moe_cf, block_tables=bt,
-                                    chunk_len=true_len)
+                                    chunk_len=true_len,
+                                    shard=self._shard_plan)
         logits = logits_fn(params, self.cfg, h)
         idx = jnp.maximum(true_len - 1, 0)
         last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
@@ -201,7 +277,8 @@ class ServingEngine:
         h, cache, _ = model_forward(params, self.cfg, tokens, cache=cache,
                                     pos0=pos0, enc_states=enc_states,
                                     moe_cf=self._moe_cf, block_tables=bt,
-                                    chunk_len=true_len, verify=True)
+                                    chunk_len=true_len, verify=True,
+                                    shard=self._shard_plan)
         logits = logits_fn(params, self.cfg, h)
         return jnp.argmax(logits[0], axis=-1).astype(jnp.int32), cache
 
@@ -218,7 +295,8 @@ class ServingEngine:
             h, new_cache, _ = model_forward(
                 params, self.cfg, tok[:, None], cache=cache, pos0=pos,
                 enc_states=enc_states, moe_cf=self._moe_cf,
-                block_tables=bt, chunk_len=active.astype(jnp.int32))
+                block_tables=bt, chunk_len=active.astype(jnp.int32),
+                shard=self._shard_plan)
             logits = logits_fn(params, self.cfg, h)[:, -1]
             key, sk = jax.random.split(key)
             nxt = sample(logits, sk, self.ecfg.temperature)

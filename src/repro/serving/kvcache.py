@@ -295,6 +295,25 @@ class PagedKVManager(PageAllocator):
         # engine's prefix_hit_tokens, its superset)
         self._partial_pending = 0
 
+    # ----------------------- mesh placement ----------------------------- #
+    def place(self, mesh, plan) -> None:
+        """Shard the at-rest device state over a serving mesh slice:
+        attention page pools split on the kv-head axis, SSM lane rows on
+        the slot axis, MLA latent pools and block tables replicated
+        (distributed/sharding.serving_cache_specs).  Logical accounting
+        (free lists, refcounts, prefix index) is host-side and unchanged —
+        one allocator drives every shard."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distributed import sharding as shd
+        specs = shd.serving_cache_specs(self.pools, self.cfg, plan,
+                                        lane_view=False)
+        self.pools = jax.device_put(
+            self.pools,
+            jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,
+                         is_leaf=lambda x: isinstance(x, P)))
+        self.block_tables = jax.device_put(self.block_tables,
+                                           NamedSharding(mesh, P()))
+
     # ------------------------ physical page ops ------------------------- #
     @property
     def used_pages(self) -> int:

@@ -4,7 +4,9 @@ import pytest
 
 from repro.core.perf_model import PerfModel, opt_perf_model
 from repro.core.spec_planner import (AcceptanceEstimator, acc_len,
-                                     plan_speculation, strengthen_slo)
+                                     plan_speculation,
+                                     plan_speculation_requests,
+                                     strengthen_slo)
 
 
 def test_acc_len_bounds():
@@ -202,3 +204,75 @@ def test_estimator_weighting_by_drafted_tokens():
     a.observe("k", 1, 1)
     b.observe("k", 8, 8)
     assert b.alpha("k") > a.alpha("k")
+
+
+# ---------------------- per-request planner -------------------------- #
+def _exhaustive_request_plan(tpots, alphas, perf, max_sl=4):
+    """Brute-force optimum over all (max_sl+1)^R assignments."""
+    import itertools
+    best = None
+    for sls in itertools.product(range(max_sl + 1), repeat=len(tpots)):
+        T = min(tpots[r] * acc_len(sls[r], alphas[r])
+                for r in range(len(tpots)))
+        cap = perf.time2bs(T, spec_step=max(sls))
+        pb = cap - sum(s + 1 for s in sls)
+        if pb < 0:
+            continue
+        tpt = pb / T if T > 0 else 0.0
+        if best is None or tpt > best[0]:
+            best = (tpt, sls, T)
+    return best
+
+
+def test_plan_requests_matches_exhaustive():
+    """Candidate-grid scan with minimal per-request drafts == brute force
+    over all assignments (the grid restriction loses nothing)."""
+    perf = opt_perf_model(7e9, spec=True)
+    cases = [
+        ([0.025, 0.025], [0.8, 0.8]),
+        ([0.008, 0.05], [0.9, 0.6]),
+        ([0.0125, 0.0125, 0.04], [0.95, 0.7, 0.8]),
+        ([0.01, 0.02, 0.03, 0.05], [0.85, 0.85, 0.5, 0.99]),
+        ([0.009, 0.011], [0.3, 0.97]),
+    ]
+    for tpots, alphas in cases:
+        plan = plan_speculation_requests(tpots, alphas, perf, max_sl=4)
+        ref = _exhaustive_request_plan(tpots, alphas, perf, max_sl=4)
+        if ref is None:
+            assert plan is None, (tpots, alphas, plan)
+            continue
+        assert plan is not None, (tpots, alphas)
+        assert plan.prefill_tpt == pytest.approx(ref[0], rel=1e-9), (
+            tpots, alphas, plan, ref)
+
+
+def test_plan_requests_differentiates_within_tier():
+    """Two same-tier requests where one carries a strengthened (tighter)
+    TPOT: the fallen-behind request drafts at least as deep as its peer
+    rather than both planning at the class tier."""
+    perf = opt_perf_model(7e9, spec=True)
+    tpots = [0.0125, strengthen_slo(0.0125, tokens_behind=15)]
+    plan = plan_speculation_requests(tpots, [0.9, 0.9], perf)
+    assert plan is not None
+    assert plan.spec_lens[1] >= plan.spec_lens[0]
+    # the strengthened request's own (tighter) pace is still met
+    assert tpots[1] * acc_len(plan.spec_lens[1], 0.9) >= plan.batch_time - 1e-12
+
+
+def test_plan_requests_empty_and_infeasible():
+    perf = opt_perf_model(7e9, spec=True)
+    empty = plan_speculation_requests([], [], perf)
+    assert empty is not None and empty.spec_step == 0
+    assert plan_speculation_requests([1e-6], [0.5], perf) is None
+
+
+def test_plan_requests_uniform_matches_per_tier():
+    """With identical requests, the per-request optimum equals the
+    per-tier planner's single-tier optimum."""
+    perf = opt_perf_model(7e9, spec=True)
+    n, tpot, a = 8, 0.0125, 0.9
+    tier = plan_speculation([n], [tpot], perf, alpha=a)
+    req = plan_speculation_requests([tpot] * n, [a] * n, perf)
+    assert tier is not None and req is not None
+    assert req.prefill_tpt == pytest.approx(tier.prefill_tpt, rel=1e-9)
+    assert set(req.spec_lens) == {tier.spec_lens[0]}
