@@ -1,0 +1,398 @@
+"""Open-loop trace replay through the HTTP/SSE serving gateway.
+
+Replays an arrival-timestamped trace of the paper's six-scenario mix
+(``repro.core.trace``) against a live ``SSEGateway`` over real TCP:
+every request fires at its trace timestamp *regardless of how the
+server is doing* (open loop — a slow server accumulates concurrent
+streams instead of slowing the arrival process down, the property that
+makes SLO attainment measurements honest).  Per-SLO-class attainment,
+goodput, and client-observed wall TTFT/TPOT are reported through
+``benchmarks.common``.
+
+Knobs: ``--speed`` compresses arrival gaps, ``--prewarm`` runs throwaway
+requests first (JIT compilation happens off the clock), ``--timeout``
+bounds each stream client-side (disconnect → server cancels, pages
+freed), ``--hedge`` launches a duplicate request when the first token
+has not arrived within the hedge window (first responder wins, the
+loser is disconnected).
+
+``--smoke`` is the ROADMAP item 2 acceptance gate: replay the mix
+open-loop against a 2-replica smollm-135m cluster (CPU-scale lengths,
+every token executed by the model) and assert (a) every stream reached
+a terminal done event, (b) replayer-observed per-class attainment
+matches the cluster's own telemetry and ``ClusterStats`` exactly, and
+(c) each gateway token stream is bit-identical to driving the same
+trace in process on a fresh identical cluster.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import contextlib
+import dataclasses
+import math
+from typing import Optional, Union
+
+from benchmarks.common import emit
+from repro.core.trace import (SIX_SCENARIO_MIX, TraceEntry, generate_trace,
+                              load_trace, save_trace)
+from repro.serving.gateway import (GatewayClientError, collect_stream,
+                                   open_sse, run_in_thread, sse_events)
+
+# Prewarm requests use a deliberately off-grid TPOT so their SLO class
+# ("tpot=0.5") never collides with a trace class in per-class reports.
+PREWARM_PAYLOAD = {"slo": "loose", "tpot": 0.5,
+                   "prompt_len": 8, "output_len": 4}
+
+
+@dataclasses.dataclass
+class ReplayRecord:
+    """Client-side outcome of one replayed trace entry.  Times are wall
+    seconds relative to the replay clock's t0."""
+
+    entry: TraceEntry
+    target: float = 0.0               # scheduled send time (arrival/speed)
+    sent: float = 0.0                 # actual send time (open-loop error)
+    first_token: Optional[float] = None
+    finished: Optional[float] = None
+    tokens: list = dataclasses.field(default_factory=list)
+    done: Optional[dict] = None       # the SSE done payload
+    timed_out: bool = False
+    hedged: bool = False
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.done is not None
+
+    @property
+    def attained(self) -> bool:
+        return bool(self.done and self.done.get("attained"))
+
+    @property
+    def ttft(self) -> float:
+        if self.first_token is None:
+            return math.nan
+        return self.first_token - self.sent
+
+    @property
+    def tpot(self) -> float:
+        if self.first_token is None or self.finished is None \
+                or len(self.tokens) < 2:
+            return math.nan
+        return (self.finished - self.first_token) / (len(self.tokens) - 1)
+
+
+async def _attempt(host: str, port: int, payload: dict,
+                   first_evt: asyncio.Event) -> dict:
+    """One POST + full stream consumption; sets ``first_evt`` at the
+    first token (the hedging signal).  Cancellation closes the socket,
+    which the gateway turns into a request cancel."""
+    loop = asyncio.get_running_loop()
+    out = {"first": None, "end": None, "tokens": [], "done": None}
+    reader, writer = await open_sse(host, port, payload)
+    try:
+        async for ev, data in sse_events(reader):
+            if ev == "token":
+                if out["first"] is None:
+                    out["first"] = loop.time()
+                    first_evt.set()
+                out["tokens"].extend(data["tokens"])
+            elif ev == "done":
+                out["done"] = data
+                out["end"] = loop.time()
+                first_evt.set()
+                break
+    finally:
+        with contextlib.suppress(Exception):
+            writer.close()
+    return out
+
+
+async def _fire(host: str, port: int, rec: ReplayRecord, t0: float,
+                speed: float, timeout: Optional[float],
+                hedge: Optional[float]) -> None:
+    """Fire one entry at its scheduled time and ride the stream(s) to a
+    terminal state.  Never raises — outcomes land on ``rec``."""
+    loop = asyncio.get_running_loop()
+    rec.target = rec.entry.arrival / speed
+    delay = (t0 + rec.target) - loop.time()
+    if delay > 0:
+        await asyncio.sleep(delay)
+    rec.sent = loop.time() - t0
+    payload = rec.entry.to_payload()
+
+    attempts: list[asyncio.Task] = []
+
+    async def run_attempts() -> dict:
+        evt = asyncio.Event()
+        attempts.append(asyncio.ensure_future(
+            _attempt(host, port, payload, evt)))
+        events = [evt]
+        if hedge is not None:
+            with contextlib.suppress(asyncio.TimeoutError):
+                await asyncio.wait_for(asyncio.shield(evt.wait()), hedge)
+            if not evt.is_set():
+                evt2 = asyncio.Event()
+                attempts.append(asyncio.ensure_future(
+                    _attempt(host, port, payload, evt2)))
+                events.append(evt2)
+                rec.hedged = True
+        # first attempt to produce a token (or fail) wins; disconnect the
+        # rest so the server releases their pages
+        waiters = [asyncio.ensure_future(e.wait()) for e in events]
+        try:
+            await asyncio.wait(waiters + attempts,
+                               return_when=asyncio.FIRST_COMPLETED)
+        finally:
+            for w in waiters:
+                w.cancel()
+        winner = None
+        for task, e in zip(attempts, events):
+            if e.is_set() or task.done():
+                winner = task
+                break
+        winner = winner if winner is not None else attempts[0]
+        for task in attempts:
+            if task is not winner:
+                task.cancel()
+        return await winner
+
+    try:
+        if timeout is not None:
+            out = await asyncio.wait_for(run_attempts(), timeout)
+        else:
+            out = await run_attempts()
+        rec.tokens = out["tokens"]
+        rec.done = out["done"]
+        rec.first_token = (None if out["first"] is None
+                           else out["first"] - t0)
+        rec.finished = None if out["end"] is None else out["end"] - t0
+    except asyncio.TimeoutError:
+        rec.timed_out = True
+    except GatewayClientError as e:
+        rec.error = str(e)
+    finally:
+        for task in attempts:
+            if not task.done():
+                task.cancel()
+        await asyncio.gather(*attempts, return_exceptions=True)
+
+
+async def replay_trace(host: str, port: int, entries: list[TraceEntry],
+                       speed: float = 1.0,
+                       timeouts: Union[None, float, dict] = None,
+                       hedge: Optional[float] = None,
+                       prewarm: int = 2,
+                       prewarm_sink: Optional[list] = None
+                       ) -> list[ReplayRecord]:
+    """Open-loop replay: all entries are scheduled up front against one
+    wall clock; nothing about one request's progress delays another.
+    ``timeouts`` is a scalar or an ``{slo_class: seconds}`` dict;
+    prewarm done payloads are appended to ``prewarm_sink``."""
+    for _ in range(prewarm):
+        with contextlib.suppress(GatewayClientError):
+            res = await collect_stream(host, port, dict(PREWARM_PAYLOAD))
+            if prewarm_sink is not None:
+                prewarm_sink.append(res["done"])
+    loop = asyncio.get_running_loop()
+    recs = [ReplayRecord(entry=e) for e in entries]
+    t0 = loop.time() + 0.05
+    await asyncio.gather(*(
+        _fire(host, port, r, t0, speed,
+              timeouts.get(r.entry.slo_class()) if isinstance(timeouts,
+                                                              dict)
+              else timeouts, hedge)
+        for r in recs))
+    return recs
+
+
+# ------------------------------ reporting ------------------------------- #
+def summarize(records: list[ReplayRecord], wall: float,
+              prefix: str = "replay") -> dict:
+    """Per-SLO-class rollup; emits one benchmark row per class plus an
+    aggregate row.  Returns ``{cls: {n, done, attained, ...}}``."""
+    by_cls: dict[str, list[ReplayRecord]] = {}
+    for r in records:
+        by_cls.setdefault(r.entry.slo_class(), []).append(r)
+    out = {}
+    for cls in sorted(by_cls):
+        rs = by_cls[cls]
+        att = sum(r.attained for r in rs)
+        done = sum(r.ok for r in rs)
+        ttfts = [r.ttft for r in rs if not math.isnan(r.ttft)]
+        tpots = [r.tpot for r in rs if not math.isnan(r.tpot)]
+        row = {"n": len(rs), "done": done, "attained": att,
+               "attain_rate": att / len(rs),
+               "timeouts": sum(r.timed_out for r in rs),
+               "errors": sum(r.error is not None for r in rs),
+               "hedged": sum(r.hedged for r in rs),
+               "goodput": att / wall if wall > 0 else 0.0,
+               "ttft_ms": (sum(ttfts) / len(ttfts) * 1e3) if ttfts
+               else math.nan,
+               "tpot_ms": (sum(tpots) / len(tpots) * 1e3) if tpots
+               else math.nan}
+        out[cls] = row
+        emit(f"{prefix}_{cls.replace('=', '_')}", row["attain_rate"] * 100,
+             f"n={row['n']};done={done};attained={att};"
+             f"timeouts={row['timeouts']};hedged={row['hedged']};"
+             f"goodput={row['goodput']:.2f};ttft_ms={row['ttft_ms']:.1f};"
+             f"tpot_ms={row['tpot_ms']:.1f}")
+    lag = max((r.sent - r.target for r in records), default=0.0)
+    emit(f"{prefix}_aggregate",
+         100.0 * sum(r.attained for r in records) / max(len(records), 1),
+         f"n={len(records)};wall_s={wall:.2f};max_sched_lag_s={lag:.3f};"
+         f"classes={len(out)}")
+    return out
+
+
+# ----------------------------- smoke cluster ---------------------------- #
+def _make_cluster(n_replicas: int, telemetry=True):
+    """2-replica-class real cluster at CPU-executable scale (random
+    smollm-135m weights, virtual perf model) — sized so the miniaturized
+    six-scenario mix (worst case ~120 tokens for a 6-pair ToolLLM loop)
+    always fits ``max_len``."""
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.core.perf_model import cpu_scale_perf_model
+    from repro.core.router import RoutingPolicy, make_real_cluster
+    from repro.core.scheduler import SchedulerConfig
+    from repro.models import init_params
+
+    cfg = get_reduced("smollm-135m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    cluster = make_real_cluster(
+        n_replicas, cfg, params, cpu_scale_perf_model(),
+        policy=RoutingPolicy(max_hops=1),
+        total_pages=64 * n_replicas, replica_pages=64, page_size=8,
+        max_slots=8, max_len=144,
+        sched_cfg=SchedulerConfig(page_size=8,
+                                  prefill_emits_first_token=True),
+        telemetry=telemetry)
+    return cluster, cfg, params
+
+
+def _smoke_trace(cfg, rate: float, duration: float, seed: int
+                 ) -> list[TraceEntry]:
+    return generate_trace(rate, duration, seed=seed, mix=SIX_SCENARIO_MIX,
+                          time_scale=0.02, max_stage_tokens=16,
+                          vocab=cfg.vocab)
+
+
+def _drive_direct(entries: list[TraceEntry], cluster) -> dict[int, list]:
+    """The conformance reference: the same trace driven in process (no
+    HTTP, trace arrivals on the virtual clock)."""
+    streams: dict[int, list] = {}
+
+    def on_token(rid: int, toks: list) -> None:
+        streams.setdefault(rid, []).extend(int(t) for t in toks)
+
+    for e in entries:
+        cluster.submit(e.to_request(), prompt=list(e.prompt),
+                       on_token=on_token)
+    cluster.run_until_idle(max_steps=50_000)
+    return streams
+
+
+def run(args) -> None:
+    import time
+
+    from repro.telemetry import ClusterTelemetry
+
+    tel = ClusterTelemetry(enabled=True, wall_clock=True)
+    cluster, cfg, params = _make_cluster(args.replicas, telemetry=tel)
+    if args.trace:
+        entries = load_trace(args.trace)
+    else:
+        entries = _smoke_trace(cfg, args.rate, args.duration, args.seed)
+    if args.save_trace:
+        save_trace(entries, args.save_trace)
+        print(f"trace -> {args.save_trace} ({len(entries)} entries)",
+              flush=True)
+    handle = run_in_thread(cluster, seed=args.seed)
+    t0 = time.time()
+    prewarm_done: list = []
+    records = asyncio.run(replay_trace(
+        handle.host, handle.port, entries, speed=args.speed,
+        timeouts=args.timeout, hedge=args.hedge, prewarm=args.prewarm,
+        prewarm_sink=prewarm_done))
+    handle.shutdown(drain=True)
+    wall = time.time() - t0
+    summarize(records, wall)
+    stats = cluster.stats
+
+    emit("replay_cluster", float(stats.attained),
+         f"served={stats.served}/{stats.submitted};"
+         f"attained={stats.attained};cancelled={stats.cancelled};"
+         f"preempted={stats.preempted};tokens={stats.tokens_out};"
+         f"replicas={args.replicas}")
+
+    if args.smoke:
+        _assert_smoke(args, entries, records, cluster, tel, prewarm_done)
+        emit("replay_smoke", 1.0, "ok=1")
+
+
+def _assert_smoke(args, entries, records, cluster, tel,
+                  prewarm_done) -> None:
+    """ROADMAP item 2 acceptance: terminal outcomes for every stream,
+    replayer-vs-ClusterStats attainment consistency, and gateway streams
+    bit-identical to in-process driving."""
+    stats = cluster.stats
+
+    # (a) every accepted stream reached its done event
+    bad = [r for r in records if not r.ok]
+    assert not bad, [(r.entry.rid, r.timed_out, r.error) for r in bad]
+    assert not any(r.done["dropped"] for r in records), "unexpected drops"
+
+    # (b) attainment the client saw == the cluster's own accounting
+    assert stats.served == len(entries) + len(prewarm_done), \
+        (stats.served, len(entries), len(prewarm_done))
+    assert stats.cancelled == 0, stats.cancelled
+    want_att = (sum(r.attained for r in records)
+                + sum(bool(d and d.get("attained")) for d in prewarm_done))
+    assert stats.attained == want_att, (stats.attained, want_att)
+    per_cls = tel._per_class_cumulative()
+    for cls in sorted({r.entry.slo_class() for r in records}):
+        rs = [r for r in records if r.entry.slo_class() == cls]
+        fin, att = per_cls[cls]
+        assert fin == len(rs), (cls, fin, len(rs))
+        assert att == sum(r.attained for r in rs), (cls, att)
+
+    # (c) token streams bit-identical to in-process driving of the same
+    # trace on a fresh identical cluster
+    ref_cluster, _, _ = _make_cluster(args.replicas, telemetry=False)
+    ref = _drive_direct(entries, ref_cluster)
+    for e, r in zip(entries, records):
+        assert r.tokens == ref.get(e.rid, []), \
+            (e.rid, e.scenario, len(r.tokens), len(ref.get(e.rid, [])))
+    print(f"smoke: {len(entries)} streams bit-identical to in-process "
+          f"driving across {args.replicas} replicas", flush=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--rate", type=float, default=2.5,
+                    help="mean arrival rate (req/s of virtual trace time)")
+    ap.add_argument("--duration", type=float, default=6.0,
+                    help="trace span in seconds")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--speed", type=float, default=1.0,
+                    help="replay speed-up: arrival gaps divided by this")
+    ap.add_argument("--timeout", type=float, default=None,
+                    help="per-request client timeout in wall seconds "
+                         "(timeout disconnects; the server cancels)")
+    ap.add_argument("--hedge", type=float, default=None,
+                    help="hedge window: duplicate a request whose first "
+                         "token is slower than this (first wins)")
+    ap.add_argument("--prewarm", type=int, default=2,
+                    help="throwaway requests before the clock starts "
+                         "(JIT compilation off the measurement)")
+    ap.add_argument("--trace", type=str, default=None,
+                    help="replay a saved JSONL trace instead of sampling")
+    ap.add_argument("--save-trace", type=str, default=None,
+                    help="write the sampled trace to this JSONL path")
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert the ROADMAP item 2 acceptance criteria")
+    run(ap.parse_args())

@@ -3,6 +3,11 @@ scheduler plans token batches and the REAL JAX engine executes them on a
 reduced SmolLM with batched requests, chunked prefill and KV paging.
 
   PYTHONPATH=src python examples/serve_e2e.py
+
+Pass ``--http`` to expose the same stack as a live HTTP/SSE gateway
+(2 replicas, Ctrl-C drains in-flight streams before exit):
+
+  PYTHONPATH=src python examples/serve_e2e.py --http --port 8080
 """
 import sys
 
@@ -10,5 +15,6 @@ from repro.launch.serve import main
 
 if __name__ == "__main__":
     sys.argv = [sys.argv[0], "--arch", "smollm-135m", "--scenario",
-                "chatbot", "--rate", "2.0", "--duration", "6.0"]
+                "chatbot", "--rate", "2.0", "--duration", "6.0",
+                ] + sys.argv[1:]
     main()

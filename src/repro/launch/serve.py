@@ -9,6 +9,16 @@ paging, tool loops, SLO accounting.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
       --rate 2.0 --duration 8
+
+``--http`` switches from batch replay to the live serving path: an
+asyncio HTTP/SSE gateway (serving/gateway.py) over an N-replica
+``ClusterFrontend``, with wall-clock telemetry on ``GET /metrics`` and
+graceful SIGINT/SIGTERM shutdown — intake stops, every in-flight stream
+drains to its done event, then the process exits:
+
+  PYTHONPATH=src python -m repro.launch.serve --http --replicas 2
+  curl -N -d '{"slo":"tight","prompt_len":16,"output_len":32}' \
+      http://127.0.0.1:8080/v1/generate
 """
 from __future__ import annotations
 
@@ -27,6 +37,50 @@ from repro.serving.frontend import ServingFrontend
 VIRTUAL_PERF = cpu_scale_perf_model()
 
 
+def serve_http(args) -> None:
+    """Run the SSE gateway until SIGINT/SIGTERM, then drain gracefully."""
+    import asyncio
+    import signal
+
+    from repro.core.router import RoutingPolicy, make_real_cluster
+    from repro.serving.gateway import SSEGateway
+    from repro.telemetry import ClusterTelemetry
+
+    cfg = get_reduced(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    init = init_encdec_params if cfg.arch_type == "encdec" else init_params
+    params = init(key, cfg)
+    tel = ClusterTelemetry(enabled=True, wall_clock=True)
+    cluster = make_real_cluster(
+        args.replicas, cfg, params, VIRTUAL_PERF,
+        policy=RoutingPolicy(max_hops=1),
+        total_pages=64 * args.replicas, replica_pages=64, page_size=8,
+        max_slots=8, max_len=256,
+        sched_cfg=SchedulerConfig(page_size=8,
+                                  prefill_emits_first_token=True),
+        telemetry=tel)
+
+    async def amain():
+        gw = await SSEGateway(cluster, host=args.host, port=args.port,
+                              seed=args.seed).start()
+        stop = asyncio.Event()
+        loop = asyncio.get_running_loop()
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            loop.add_signal_handler(sig, stop.set)
+        print(f"serving {args.arch} x{args.replicas} at {gw.url} "
+              f"(SSE on POST /v1/generate; Ctrl-C drains and exits)",
+              flush=True)
+        await stop.wait()
+        print("draining in-flight streams...", flush=True)
+        await gw.shutdown(drain=True)
+        s = cluster.stats
+        print(f"drained: served {s.served}/{s.submitted}, "
+              f"attained {s.attained}, cancelled {s.cancelled}, "
+              f"streams completed {gw.stats.completed}", flush=True)
+
+    asyncio.run(amain())
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
@@ -37,7 +91,16 @@ def main():
     ap.add_argument("--time-scale", type=float, default=0.02,
                     help="shrink request lengths to CPU scale")
     ap.add_argument("--max-requests", type=int, default=24)
+    ap.add_argument("--http", action="store_true",
+                    help="serve over HTTP/SSE instead of batch replay")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080)
+    ap.add_argument("--replicas", type=int, default=2)
     args = ap.parse_args()
+
+    if args.http:
+        serve_http(args)
+        return
 
     cfg = get_reduced(args.arch)
     key = jax.random.PRNGKey(args.seed)

@@ -48,6 +48,7 @@ class ClusterStats:
     served: int = 0          # terminal outcomes (finished + dropped)
     attained: int = 0
     dropped: int = 0
+    cancelled: int = 0       # caller-cancelled (disconnect); never served
     routed: int = 0          # requests served away from their first choice
     best_effort: int = 0     # requests demoted to the best-effort tier
     preempted: int = 0       # real PagedKVManager.preempt invocations
@@ -118,6 +119,7 @@ class ClusterFrontend:
         self._routed: set[int] = set()
         self._submitted = 0
         self._dropped = 0
+        self._cancelled = 0
         self._prompt_tokens = 0
         self._affinity_routed = 0
 
@@ -217,6 +219,24 @@ class ClusterFrontend:
         self._prompt_tokens += (len(prompt) if prompt is not None
                                 else req.stages[0].length)
 
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request cluster-wide (client disconnect): a pending
+        arrival is simply unqueued; a routed request is cancelled on its
+        replica via ``ReplicaDriver.cancel`` (engine drop — pages and
+        sequence slot released, shared budget credited).  Returns whether
+        the request was found anywhere."""
+        for p in list(self.pending):
+            if p.req.rid == rid:
+                self.pending.remove(p)
+                self.payloads.pop(rid, None)
+                self._cancelled += 1
+                return True
+        self.payloads.pop(rid, None)
+        for d in self.drivers:
+            if d.cancel(rid):
+                return True
+        return False
+
     @property
     def idle(self) -> bool:
         return not self.pending and all(d.idle for d in self.drivers)
@@ -228,6 +248,7 @@ class ClusterFrontend:
             base, submitted=self._submitted,
             dropped=base.dropped + self._dropped,
             served=base.served + self._dropped,
+            cancelled=base.cancelled + self._cancelled,
             routed=len(self._routed),
             affinity_routed=self._affinity_routed,
             prompt_tokens=self._prompt_tokens)
@@ -235,6 +256,7 @@ class ClusterFrontend:
             s.served += d.stats.served
             s.attained += d.stats.attained
             s.dropped += d.stats.dropped
+            s.cancelled += d.stats.cancelled
             s.best_effort += d.stats.best_effort
             s.tokens_out += d.stats.tokens_out
             s.preempted += d.engine.counters["preemptions"]
@@ -390,6 +412,7 @@ class ClusterFrontend:
         s.served += d.stats.served
         s.attained += d.stats.attained
         s.dropped += d.stats.dropped
+        s.cancelled += d.stats.cancelled
         s.best_effort += d.stats.best_effort
         s.tokens_out += d.stats.tokens_out
         s.preempted += d.engine.counters["preemptions"]

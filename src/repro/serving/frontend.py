@@ -45,7 +45,8 @@ class FrontendStats:
     served: int = 0          # terminal outcomes (finished + dropped)
     attained: int = 0
     dropped: int = 0
-    tokens_out: int = 0
+    cancelled: int = 0       # caller-cancelled (client disconnect); not
+    tokens_out: int = 0      # counted as served — never an SLO outcome
     best_effort: int = 0     # requests demoted to the best-effort tier
     preempted: int = 0       # real PagedKVManager.preempt invocations
 
@@ -87,6 +88,11 @@ class ReplicaDriver:
         self.encs: dict[int, object] = {}
         self.stats = FrontendStats()
         self.preempted_rids: set[int] = set()
+        # terminal-outcome hook: a serving gateway (or any transport)
+        # sets `on_finish(req, attained, dropped)` to learn the moment a
+        # request reaches a terminal state, since `_finish`/`drop_request`
+        # immediately forget the stream callback
+        self.on_finish: Optional[Callable] = None
         # online per-SLO-class acceptance estimation: when the scheduler
         # plans speculation (cfg.spec_alpha prior set), attach an EWMA
         # estimator and feed it each verify's accepted/drafted outcome so
@@ -136,7 +142,39 @@ class ReplicaDriver:
         self.stats.served += 1
         if self.tel is not None:
             self.tel.on_drop(r)
+        if self.on_finish is not None:
+            self.on_finish(r, False, True)
         self.forget(r.rid)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request on behalf of the caller (client disconnect):
+        remove it from every queue it may sit in and release its engine
+        state through the existing preempt/drop release path —
+        ``engine.drop`` frees the device pages (CoW-aware unref, shared
+        budget credited) and the sequence slot in one call.  Cancelled
+        requests count in ``stats.cancelled`` only; they are neither
+        served nor attained.  Returns whether the request was found."""
+        found = False
+        for r in list(self.new_q):
+            if r.rid == rid:
+                self.new_q.remove(r)
+                found = True
+        for e in list(self.be.entries):
+            if e.req.rid == rid:
+                self.be.entries.remove(e)
+                found = True
+        for r in list(self.running):
+            if r.rid == rid:
+                self.running.remove(r)
+                found = True
+        if rid in self.engine.reqs:
+            self.engine.drop(rid)
+            found = True
+        if found:
+            self.stats.cancelled += 1
+            self.preempted_rids.discard(rid)
+            self.forget(rid)
+        return found
 
     @property
     def idle(self) -> bool:
@@ -309,6 +347,8 @@ class ReplicaDriver:
         self.stats.attained += att
         if self.tel is not None:
             self.tel.on_finish(r, bool(att))
+        if self.on_finish is not None:
+            self.on_finish(r, bool(att), False)
         self.forget(r.rid)
 
     # -------------------- admission & victim selection ------------------ #
@@ -574,6 +614,10 @@ class ServingFrontend:
         """Queue a request; ``on_token(rid, [tokens])`` streams output."""
         self.driver.enqueue(req, prompt, on_token, enc_states)
         self.driver.stats.submitted += 1
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a submitted request (client disconnect passthrough)."""
+        return self.driver.cancel(rid)
 
     @property
     def idle(self) -> bool:

@@ -6,7 +6,8 @@ from repro.telemetry.autoscaler import (Autoscaler, AutoscalerConfig,
                                         ScaleDecision)
 from repro.telemetry.exporters import (StepTracer, histogram_percentiles,
                                        parse_prometheus, prometheus_text,
-                                       quantile_from_exposition)
+                                       quantile_from_exposition,
+                                       timeseries_prometheus_text)
 from repro.telemetry.instruments import (ClusterTelemetry, PlanTimer,
                                          ReplicaTelemetry, slo_class_of)
 from repro.telemetry.registry import (LATENCY_BUCKETS, Counter, Gauge,

@@ -72,6 +72,38 @@ def prometheus_text(registry: MetricsRegistry) -> str:
     return "\n".join(out) + "\n"
 
 
+def timeseries_prometheus_text(sampler, name: str = "repro_step_series"
+                               ) -> str:
+    """Render the latest sample of every step time series as gauges:
+    ``repro_step_series{series="..."}`` carries the value and
+    ``repro_step_series_timestamp{series="..."}`` the timestamp of that
+    sample in the sampler's exported time base — virtual seconds by
+    default, wall-clock epoch seconds when the sampler was built with
+    ``wall_clock=True`` (the serving-gateway mode).  Values are
+    identical across the two modes by construction; only the timestamp
+    series differs."""
+    if not sampler.series:
+        return ""
+    out = [f"# HELP {name} latest value per step time series",
+           f"# TYPE {name} gauge"]
+    rows = []
+    for sname in sorted(sampler.series):
+        last = sampler.series[sname].last()
+        if last is None:
+            continue
+        out.append(f"{name}{_labels({'series': sname})} {_fmt(last[1])}")
+        t = sampler.last_time(sname) if hasattr(sampler, "last_time") \
+            else last[0]
+        rows.append((sname, t))
+    out.append(f"# HELP {name}_timestamp sample time of the latest value "
+               f"(virtual seconds, or wall-clock epoch in wall mode)")
+    out.append(f"# TYPE {name}_timestamp gauge")
+    for sname, t in rows:
+        out.append(f"{name}_timestamp{_labels({'series': sname})} "
+                   f"{_fmt(t if t is not None else math.nan)}")
+    return "\n".join(out) + "\n"
+
+
 def parse_prometheus(text: str) -> dict[tuple[str, tuple], float]:
     """Parse a text exposition back into ``{(name, ((label, value),
     ...)): value}``.  Minimal by design (no exemplars, no timestamps) —

@@ -162,10 +162,13 @@ class ClusterTelemetry:
 
     def __init__(self, enabled: Optional[bool] = None,
                  capacity: int = 1024, trace_path: Optional[str] = None,
-                 window: int = 32):
+                 window: int = 32, wall_clock: bool = False):
         self.enabled = metrics_enabled() if enabled is None else enabled
         self.registry = MetricsRegistry(enabled=self.enabled)
-        self.sampler = TimeSeriesSampler(capacity=capacity)
+        # wall_clock=True (the serving-gateway mode): the step series
+        # additionally record real host timestamps — see timeseries.py
+        self.sampler = TimeSeriesSampler(capacity=capacity,
+                                         wall_clock=wall_clock)
         self.tracer = StepTracer(path=trace_path, enabled=self.enabled)
         self.window = window
         self._recent: dict[str, deque] = {}    # class -> attained deque

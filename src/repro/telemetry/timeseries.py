@@ -6,10 +6,19 @@ its value appended to a fixed-capacity ring buffer, so memory stays
 bounded however long the cluster runs.  The autoscaler reads windowed
 aggregates from these series; the JSONL step tracer snapshots the same
 row per step.
+
+Wall-clock export mode (``wall_clock=True``): every push additionally
+records the REAL host timestamp in a parallel ring (``sampler.wall``),
+so a serving gateway — where steps happen at actual wall times — can
+export the same series against real time while the virtual-time rings
+(and everything computed from them) stay byte-for-byte identical to an
+in-process run.  Values are never affected by the mode; only the extra
+timestamps are.
 """
 from __future__ import annotations
 
 import math
+import time
 from typing import Callable, Optional
 
 
@@ -76,9 +85,15 @@ class TimeSeriesSampler:
     every ``sample(now)``; series can also be pushed directly
     (``push(name, t, v)``) for values only known at event time."""
 
-    def __init__(self, capacity: int = 512):
+    def __init__(self, capacity: int = 512, wall_clock: bool = False,
+                 clock: Callable[[], float] = time.time):
         self.capacity = capacity
         self.series: dict[str, RingBuffer] = {}
+        # wall-clock mode: parallel rings keyed by the same series names,
+        # timestamped by ``clock()`` at push time (values identical)
+        self.wall_clock = wall_clock
+        self.wall: dict[str, RingBuffer] = {}
+        self._clock = clock
         self._sources: dict[str, Callable[[], float]] = {}
         self.n_samples = 0
 
@@ -88,6 +103,9 @@ class TimeSeriesSampler:
 
     def push(self, name: str, t: float, v: float) -> None:
         self.series.setdefault(name, RingBuffer(self.capacity)).push(t, v)
+        if self.wall_clock:
+            self.wall.setdefault(name, RingBuffer(self.capacity)).push(
+                self._clock(), v)
 
     def sample(self, now: float) -> dict[str, float]:
         """Evaluate every source at virtual time ``now``; returns the
@@ -95,10 +113,20 @@ class TimeSeriesSampler:
         row = {}
         for name, fn in self._sources.items():
             v = float(fn())
-            self.series[name].push(now, v)
+            self.push(name, now, v)
             row[name] = v
         self.n_samples += 1
         return row
+
+    def last_time(self, name: str) -> Optional[float]:
+        """Timestamp of the latest sample of ``name`` in the exported
+        time base: wall-clock when enabled, virtual otherwise."""
+        buf = self.wall.get(name) if self.wall_clock \
+            else self.series.get(name)
+        if buf is None:
+            return None
+        last = buf.last()
+        return None if last is None else last[0]
 
     def get(self, name: str) -> RingBuffer:
         return self.series.setdefault(name, RingBuffer(self.capacity))

@@ -1,0 +1,356 @@
+"""Async HTTP/SSE serving gateway (serving/gateway.py): the transport
+adds no behavior.
+
+Covers (a) payload parsing and HTTP error surface, (b) the conformance
+contract — token streams over SSE bit-identical to driving the same
+cluster in process, with per-class SLO tagging in the start event,
+(c) concurrent interleaved streams, (d) mid-stream client disconnect →
+request cancelled, pages and slot released, shared-budget conservation,
+(e) graceful shutdown draining every accepted stream while intake is
+refused, including a replica drain under live traffic, and (f) stream
+bytes invariant to ``REPRO_METRICS`` (telemetry must observe, never
+perturb).
+
+Tests drive the asyncio loop via ``asyncio.run`` directly (no plugin
+dependency) with ``autostep=False`` gateways: the test pumps the
+cluster itself, so every run is deterministic step-for-step.
+"""
+import asyncio
+import json
+
+import jax
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.perf_model import cpu_scale_perf_model
+from repro.core.router import RoutingPolicy, make_real_cluster
+from repro.core.scheduler import SchedulerConfig
+from repro.models import init_params
+from repro.serving.gateway import (GatewayClientError, SSEGateway,
+                                   collect_stream, http_get, http_post,
+                                   open_sse, request_from_payload,
+                                   PayloadError, sse_events)
+
+VIRT = cpu_scale_perf_model()
+CFG = get_reduced("smollm-135m")
+PARAMS = init_params(jax.random.PRNGKey(0), CFG)
+
+
+def make_cluster(n=2, **kw):
+    defaults = dict(
+        policy=RoutingPolicy(max_hops=1),
+        total_pages=32 * n, replica_pages=32, page_size=4,
+        max_slots=8, max_len=96,
+        sched_cfg=SchedulerConfig(page_size=4,
+                                  prefill_emits_first_token=True))
+    defaults.update(kw)
+    return make_real_cluster(n, CFG, PARAMS, VIRT, **defaults)
+
+
+def prompt_for(rid, seed=0, n=8):
+    import numpy as np
+    rng = np.random.default_rng((seed, rid))
+    return rng.integers(1, CFG.vocab, n).tolist()
+
+
+async def _accepted(gw, n, timeout=5.0):
+    """Wait until ``n`` streams are accepted (posted + start written)."""
+    for _ in range(int(timeout / 0.01)):
+        if gw.stats.accepted >= n:
+            return
+        await asyncio.sleep(0.01)
+    raise AssertionError(f"only {gw.stats.accepted}/{n} accepted")
+
+
+def run_gateway(scenario, cluster):
+    """Start an autostep=False gateway on a fresh loop, run ``scenario
+    (gw)`` to completion, and always shut the gateway down."""
+    async def main():
+        gw = await SSEGateway(cluster, autostep=False).start()
+        try:
+            return gw, await scenario(gw)
+        finally:
+            await gw.shutdown(drain=True)
+    return asyncio.run(main())
+
+
+# ----------------------- (a) payloads and errors ------------------------ #
+def test_payload_shorthand_and_stages():
+    req, prompt = request_from_payload(
+        {"slo": "tight", "prompt_len": 8, "output_len": 4}, 7, 1.5)
+    assert req.rid == 7 and req.arrival == 1.5 and prompt is None
+    assert [s.length for s in req.stages] == [8, 4]
+    assert req.stages[1].slo.tpot == 0.05
+
+    req, prompt = request_from_payload(
+        {"prompt": [1, 2, 3],
+         "stages": [{"kind": "prefill", "length": 9, "ttft_slowdown": 4.0},
+                    {"kind": "decode", "length": 5, "tpot": 0.2}]}, 0, 0.0)
+    # prefill stage forced consistent with the pinned prompt
+    assert [s.length for s in req.stages] == [3, 5]
+    assert prompt == [1, 2, 3]
+
+    for bad in ({"slo": "nope", "prompt_len": 4},
+                {"slo": "tight"},                        # no prompt info
+                {"prompt": "text"},                      # not token ids
+                {"stages": []},
+                {"stages": [{"kind": "warp", "length": 4}]},
+                {"stages": [{"kind": "decode", "length": 0}]}):
+        with pytest.raises(PayloadError):
+            request_from_payload(bad, 0, 0.0)
+
+
+def test_http_error_surface():
+    cluster = make_cluster(n=1)
+
+    async def scenario(gw):
+        status, body = await http_post(gw.host, gw.port, "/v1/generate",
+                                       {"slo": "nope", "prompt_len": 4})
+        assert status == 400 and "slo" in body
+        status, _ = await http_get(gw.host, gw.port, "/nope")
+        assert status == 404
+        status, body = await http_get(gw.host, gw.port, "/healthz")
+        assert status == 200 and json.loads(body)["ok"]
+        with pytest.raises(GatewayClientError):
+            await collect_stream(gw.host, gw.port, {"stages": []})
+        return gw.stats.rejected
+
+    gw, rejected = run_gateway(scenario, cluster)
+    assert rejected == 3 and gw.stats.accepted == 0
+
+
+# ------------------- (b) conformance: SSE == in-process ----------------- #
+def test_sse_streams_bit_identical_to_inprocess_drive():
+    """The tentpole contract: for the same prompts, tokens streamed over
+    SSE are bit-identical to driving a fresh identical cluster in
+    process — across replicas, batching, and routing."""
+    payloads = [
+        {"slo": "tight", "prompt": prompt_for(0), "output_len": 6},
+        {"slo": "loose", "prompt": prompt_for(1, n=12), "output_len": 5},
+        {"prompt": prompt_for(2, n=6),
+         "stages": [{"kind": "prefill", "length": 6, "ttft_slowdown": 4.0},
+                    {"kind": "decode", "length": 4, "tpot": 0.05},
+                    {"kind": "decode", "length": 3, "tpot": 0.1}]},
+    ]
+
+    async def scenario(gw):
+        tasks = [asyncio.create_task(
+            collect_stream(gw.host, gw.port, p)) for p in payloads]
+        await _accepted(gw, len(payloads))
+        await gw.pump_until_idle()
+        return await asyncio.gather(*tasks)
+
+    gw, results = run_gateway(scenario, make_cluster(n=2))
+    assert [r["slo_class"] for r in results] == ["tpot=0.05", "tpot=0.1",
+                                                 "tpot=0.05"]
+    assert all(r["done"]["attained"] in (True, False) for r in results)
+    assert gw.stats.completed == len(payloads)
+
+    # in-process reference on a FRESH identical cluster
+    ref_cluster = make_cluster(n=2)
+    streams = {}
+
+    def on_token(rid, toks):
+        streams.setdefault(rid, []).extend(int(t) for t in toks)
+
+    for rid, p in enumerate(payloads):
+        req, prompt = request_from_payload(p, rid, 0.0)
+        ref_cluster.submit(req, prompt=prompt, on_token=on_token)
+    ref_cluster.run_until_idle()
+    expected_out = [6, 5, 7]        # total decode tokens per payload
+    for rid, r in enumerate(results):
+        assert r["tokens"] == streams[rid], rid
+        assert len(r["tokens"]) == expected_out[rid]
+
+
+# ------------------- (c) concurrent interleaved streams ----------------- #
+def test_concurrent_streams_interleave_chunks():
+    payloads = [{"slo": ("tight" if i % 2 else "loose"),
+                 "prompt": prompt_for(i), "output_len": 8}
+                for i in range(4)]
+
+    async def scenario(gw):
+        tasks = [asyncio.create_task(
+            collect_stream(gw.host, gw.port, p)) for p in payloads]
+        await _accepted(gw, len(payloads))
+        await gw.pump_until_idle()
+        return await asyncio.gather(*tasks)
+
+    gw, results = run_gateway(scenario, make_cluster(n=2))
+    assert gw.stats.accepted == gw.stats.completed == 4
+    for r in results:
+        # tokens arrived incrementally (one SSE event per engine chunk),
+        # not as a single end-of-request blob
+        assert len(r["chunks"]) >= 2
+        assert sum(len(c) for c in r["chunks"]) == len(r["tokens"])
+    rids = {r["rid"] for r in results}
+    assert len(rids) == 4
+
+
+# --------------- (d) disconnect -> cancel, pages released --------------- #
+def test_disconnect_cancels_and_releases_pages():
+    cluster = make_cluster(n=2)
+
+    async def scenario(gw):
+        # a long stream we will abandon mid-flight + a bystander
+        long_req = {"slo": "loose", "prompt": prompt_for(0), "output_len": 80}
+        bystander = asyncio.create_task(collect_stream(
+            gw.host, gw.port,
+            {"slo": "tight", "prompt": prompt_for(1), "output_len": 6}))
+        reader, writer = await open_sse(gw.host, gw.port, long_req)
+        agen = sse_events(reader)
+        ev, data = await asyncio.wait_for(agen.__anext__(), 5.0)
+        assert ev == "start"
+        live_rid = data["rid"]
+        await _accepted(gw, 2)
+        # single-batch steps so the long decode stays mid-flight (a full
+        # step may run a whole planned stage to completion)
+        got = []
+        for _ in range(200):
+            if got:
+                break
+            gw._hook()
+            gw.cluster.step(max_batches=1)
+            await asyncio.sleep(0.01)       # let SSE frames flush
+            try:
+                ev, data = await asyncio.wait_for(agen.__anext__(), 0.5)
+            except asyncio.TimeoutError:
+                continue
+            if ev == "token":
+                got.extend(data["tokens"])
+        assert got, "long stream never started"
+        assert any(live_rid in d.engine.reqs for d in cluster.drivers), \
+            "long request already finished; cannot test mid-stream cancel"
+        writer.close()                      # client walks away
+        await writer.wait_closed()
+        # the monitor read needs loop turns to observe EOF
+        for _ in range(500):
+            if gw.stats.disconnected:
+                break
+            await asyncio.sleep(0.01)
+        assert gw.stats.disconnected == 1
+        # cancelled request is fully forgotten by every engine
+        for d in cluster.drivers:
+            assert live_rid not in d.engine.reqs
+            assert all(r.rid != live_rid for r in d.running)
+        await gw.pump_until_idle()
+        return await bystander
+
+    gw, bystander = run_gateway(scenario, cluster)
+    # shared budget conservation after the cancel: every page accounted
+    assert (sum(d.engine.kv.used_pages for d in cluster.drivers)
+            == cluster.budget.used == 0)
+    assert cluster.stats.cancelled == 1
+    assert bystander["done"]["attained"] in (True, False)
+    assert gw.stats.completed == 1          # only the bystander finished
+
+
+# ------------------ (e) graceful shutdown and drain --------------------- #
+def test_shutdown_drains_all_accepted_streams():
+    cluster = make_cluster(n=2)
+
+    async def main():
+        gw = await SSEGateway(cluster, autostep=False).start()
+        payloads = [{"slo": "loose", "prompt": prompt_for(i),
+                     "output_len": 10} for i in range(3)]
+        tasks = [asyncio.create_task(
+            collect_stream(gw.host, gw.port, p)) for p in payloads]
+        await _accepted(gw, 3)
+        # shutdown with streams mid-flight: drain must complete them all
+        await gw.shutdown(drain=True)
+        results = await asyncio.gather(*tasks)
+        # intake is closed afterwards
+        with pytest.raises((GatewayClientError, ConnectionError, OSError)):
+            await collect_stream(gw.host, gw.port, payloads[0])
+        return gw, results
+
+    gw, results = asyncio.run(main())
+    assert gw.stats.completed == 3
+    assert all(r["done"] is not None for r in results)
+    assert cluster.idle
+
+
+def test_drain_replica_under_live_traffic():
+    """POST /admin/drain mid-traffic: every accepted stream still
+    completes (migration machinery keeps streams bit-identical), and the
+    pool shrinks by one replica."""
+    cluster = make_cluster(n=2)
+
+    async def scenario(gw):
+        payloads = [{"slo": "loose", "prompt": prompt_for(i),
+                     "output_len": 8} for i in range(4)]
+        tasks = [asyncio.create_task(
+            collect_stream(gw.host, gw.port, p)) for p in payloads]
+        await _accepted(gw, 4)
+        await gw.pump_until_idle(max_steps=2)   # let work get admitted
+        status, body = await http_post(gw.host, gw.port, "/admin/drain",
+                                       {"replica": 0})
+        assert status == 200, body
+        await gw.pump_until_idle()
+        results = await asyncio.gather(*tasks)
+        # retirement happens inside step once the drained replica idles
+        for _ in range(50):
+            if len(gw.cluster.drivers) == 1:
+                break
+            gw._hook()
+            gw.cluster.step()
+            await asyncio.sleep(0)
+        assert len(gw.cluster.drivers) == 1
+        status, body = await http_post(gw.host, gw.port, "/admin/drain",
+                                       {"replica": 0})
+        assert status == 400          # cannot drain the last live replica
+        return results
+
+    gw, results = run_gateway(scenario, cluster)
+    assert gw.stats.completed == 4
+    assert all(r["done"] is not None for r in results)
+    assert len(cluster.drivers) == 1
+
+
+# ------------------- (f) telemetry observes, never perturbs ------------- #
+def _stream_bytes(telemetry):
+    """Raw SSE bytes for a fixed payload sequence on a fresh cluster."""
+    cluster = make_cluster(n=2, telemetry=telemetry)
+    payloads = [
+        {"slo": "tight", "prompt": prompt_for(0), "output_len": 5},
+        {"slo": "loose", "prompt": prompt_for(1), "output_len": 6},
+    ]
+
+    async def scenario(gw):
+        out = []
+        for p in payloads:            # pinned submission order
+            reader, writer = await open_sse(gw.host, gw.port, p)
+            await gw.pump_until_idle()
+            out.append(await reader.read())      # to EOF
+            writer.close()
+        return out
+
+    _, chunks = run_gateway(scenario, cluster)
+    return chunks
+
+
+def test_metrics_do_not_change_stream_bytes(monkeypatch):
+    monkeypatch.delenv("REPRO_METRICS", raising=False)
+    off = _stream_bytes(telemetry=False)
+    monkeypatch.setenv("REPRO_METRICS", "1")
+    on = _stream_bytes(telemetry=True)
+    assert on == off
+    assert all(b"event: done" in c for c in on)
+
+
+def test_metrics_endpoint_exposes_timeseries():
+    cluster = make_cluster(n=2, telemetry=True)
+
+    async def scenario(gw):
+        task = asyncio.create_task(collect_stream(
+            gw.host, gw.port,
+            {"slo": "tight", "prompt": prompt_for(0), "output_len": 5}))
+        await _accepted(gw, 1)
+        await gw.pump_until_idle()
+        await task
+        return await http_get(gw.host, gw.port, "/metrics")
+
+    _, (status, text) = run_gateway(scenario, cluster)
+    assert status == 200
+    assert "repro_requests_finished_total" in text
+    assert "repro_step_series" in text

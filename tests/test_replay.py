@@ -1,0 +1,246 @@
+"""Open-loop trace replayer (core/trace.py + benchmarks/replay.py).
+
+Covers (a) seeded trace generation — reproducibility, six-scenario
+coverage, JSONL round-trip, payload/request consistency; (b) the
+open-loop invariant against a deliberately slow stub SSE server:
+arrivals stay on schedule while streams pile up concurrently (a
+closed-loop client would serialize); (c) client-side timeouts and
+hedging against the stub; and (d) an end-to-end replay through a real
+2-replica cluster where the attainment the replayer observed must match
+the cluster's own ``ClusterStats`` and telemetry exactly.
+
+Async tests run via ``asyncio.run`` inside plain ``def`` tests — no
+pytest-asyncio dependency in the tier-1 environment.
+"""
+import asyncio
+import math
+
+import pytest
+
+from benchmarks.replay import ReplayRecord, replay_trace, summarize
+from repro.core.trace import (SIX_SCENARIO_MIX, TraceEntry, generate_trace,
+                              load_trace, save_trace)
+from repro.serving.gateway import (_read_request, _write_event, _write_head)
+
+
+# ------------------------- (a) trace generation ------------------------- #
+def test_trace_seeded_reproducible_and_covers_mix():
+    a = generate_trace(3.0, 8.0, seed=3, time_scale=0.02,
+                       max_stage_tokens=16, vocab=256)
+    b = generate_trace(3.0, 8.0, seed=3, time_scale=0.02,
+                       max_stage_tokens=16, vocab=256)
+    assert a == b
+    assert a != generate_trace(3.0, 8.0, seed=4, time_scale=0.02,
+                               max_stage_tokens=16, vocab=256)
+    assert {e.scenario for e in a} == set(SIX_SCENARIO_MIX)
+    assert all(e.arrival <= n.arrival for e, n in zip(a, a[1:]))
+    for e in a:
+        assert e.stages[0][0] == "prefill"
+        assert len(e.prompt) == e.stages[0][1]
+        assert all(1 <= t < 256 for t in e.prompt)
+        assert all(n >= 4 and n <= 16 for _, n, _ in e.stages)
+
+
+def test_trace_jsonl_roundtrip(tmp_path):
+    entries = generate_trace(2.0, 4.0, seed=0, time_scale=0.02, vocab=128)
+    p = tmp_path / "trace.jsonl"
+    save_trace(entries, str(p))
+    assert load_trace(str(p)) == entries
+
+
+def test_trace_entry_request_and_payload_agree():
+    e = TraceEntry(rid=5, arrival=1.25, scenario="reasoning",
+                   stages=(("prefill", 4, 6.0), ("decode", 8, 0.05),
+                           ("decode", 6, 0.1)),
+                   prompt=(9, 8, 7, 6))
+    req = e.to_request()
+    assert req.rid == 5 and req.arrival == 1.25
+    assert [s.length for s in req.stages] == [4, 8, 6]
+    assert req.stages[0].slo.ttft_slowdown == 6.0
+    assert req.stages[1].slo.tpot == 0.05
+    assert e.slo_class() == "tpot=0.05"       # tightest decode tier
+    payload = e.to_payload()
+    assert payload["prompt"] == [9, 8, 7, 6]
+    assert payload["stages"][0] == {"kind": "prefill", "length": 4,
+                                    "ttft_slowdown": 6.0}
+    assert payload["stages"][1] == {"kind": "decode", "length": 8,
+                                    "tpot": 0.05}
+    with pytest.raises(ValueError):
+        generate_trace(1.0, 1.0, mix=("chatbot", "nope"))
+
+
+# --------------------------- (b)(c) stub server ------------------------- #
+class SlowStub:
+    """An SSE server that serves every stream deliberately slowly —
+    the wall-clock adversary for the open-loop invariant."""
+
+    def __init__(self, token_delay=0.15, n_tokens=4, first_delays=()):
+        self.token_delay = token_delay
+        self.n_tokens = n_tokens
+        # per-connection first-token delay overrides, consumed in order
+        self.first_delays = list(first_delays)
+        self.n_conns = 0
+        self.concurrent = 0
+        self.max_concurrent = 0
+        self.served = 0
+        self.disconnected = 0
+        self.server = None
+        self.port = None
+
+    async def start(self):
+        self.server = await asyncio.start_server(
+            self._handle, "127.0.0.1", 0)
+        self.port = self.server.sockets[0].getsockname()[1]
+        return self
+
+    async def stop(self):
+        self.server.close()
+        await self.server.wait_closed()
+
+    async def _handle(self, reader, writer):
+        try:
+            await _read_request(reader)
+        except (ValueError, ConnectionError, asyncio.IncompleteReadError):
+            writer.close()
+            return
+        conn = self.n_conns
+        self.n_conns += 1
+        self.concurrent += 1
+        self.max_concurrent = max(self.max_concurrent, self.concurrent)
+        first = (self.first_delays[conn]
+                 if conn < len(self.first_delays) else 0.0)
+        try:
+            await _write_head(writer, 200, sse=True)
+            await _write_event(writer, "start",
+                               {"rid": conn, "slo_class": "stub"})
+            await asyncio.sleep(first)
+            for i in range(self.n_tokens):
+                await _write_event(writer, "token", {"tokens": [i]})
+                await asyncio.sleep(self.token_delay)
+            await _write_event(writer, "done",
+                               {"attained": True, "dropped": False,
+                                "t": 0.0})
+            self.served += 1
+        except (ConnectionError, asyncio.CancelledError):
+            self.disconnected += 1
+        finally:
+            self.concurrent -= 1
+            writer.close()
+
+
+def _stub_entries(n, gap, out=4):
+    return [TraceEntry(rid=i, arrival=i * gap, scenario="chatbot",
+                       stages=(("prefill", 4, 10.0), ("decode", out, 0.1)),
+                       prompt=(1, 2, 3, 4)) for i in range(n)]
+
+
+def test_open_loop_arrivals_stay_on_schedule_under_slow_server():
+    """Each stream takes ~0.6s of wall time but arrivals are 0.1s apart:
+    the replayer must keep firing on schedule (streams pile up
+    concurrently) instead of serializing behind the slow server."""
+    async def main():
+        stub = await SlowStub(token_delay=0.15, n_tokens=4).start()
+        try:
+            recs = await replay_trace("127.0.0.1", stub.port,
+                                      _stub_entries(6, 0.1), prewarm=0)
+        finally:
+            await stub.stop()
+        return stub, recs
+
+    stub, recs = asyncio.run(main())
+    assert all(r.ok and not r.timed_out for r in recs)
+    # open-loop: every request fired within tolerance of its schedule
+    assert max(r.sent - r.target for r in recs) < 0.25
+    # ... which forces genuine concurrency on the slow server
+    assert stub.max_concurrent >= 3
+    assert stub.served == 6
+    # client-observed wall latencies are sane: ttft ~ first token delay,
+    # tpot ~ the stub's per-token delay
+    for r in recs:
+        assert r.tpot == pytest.approx(0.15, rel=0.5)
+        assert len(r.tokens) == 4
+
+
+def test_client_timeout_disconnects_slow_streams():
+    async def main():
+        stub = await SlowStub(token_delay=0.25, n_tokens=20).start()
+        try:
+            recs = await replay_trace("127.0.0.1", stub.port,
+                                      _stub_entries(3, 0.05, out=20),
+                                      timeouts=0.6, prewarm=0)
+            await asyncio.sleep(0.1)     # let server notice the EOFs
+        finally:
+            await stub.stop()
+        return stub, recs
+
+    stub, recs = asyncio.run(main())
+    assert all(r.timed_out and not r.ok for r in recs)
+    assert stub.served == 0
+    row = summarize(recs, wall=1.0, prefix="t")["tpot=0.1"]
+    assert row["timeouts"] == 3 and row["attained"] == 0
+
+
+def test_hedge_duplicates_slow_first_token_and_first_wins():
+    """First connection's first token is pathologically slow; the hedge
+    fires a duplicate which answers fast and wins the race."""
+    async def main():
+        stub = await SlowStub(token_delay=0.02, n_tokens=4,
+                              first_delays=(5.0,)).start()
+        try:
+            recs = await replay_trace("127.0.0.1", stub.port,
+                                      _stub_entries(1, 0.0),
+                                      hedge=0.2, timeouts=10.0, prewarm=0)
+            await asyncio.sleep(0.1)
+        finally:
+            await stub.stop()
+        return stub, recs
+
+    stub, recs = asyncio.run(main())
+    r = recs[0]
+    assert r.hedged and r.ok
+    assert len(r.tokens) == 4
+    # the winner was the fast duplicate, not the stalled primary
+    assert r.first_token - r.sent < 2.0
+    assert stub.n_conns == 2
+
+
+# ------------------- (d) end-to-end vs ClusterStats --------------------- #
+def test_replay_attainment_matches_cluster_stats():
+    """Replay a small six-scenario-mix trace through a real 2-replica
+    cluster over HTTP and require the replayer's attainment accounting
+    to agree with ``ClusterStats`` and per-class telemetry exactly."""
+    from benchmarks.replay import _make_cluster, _smoke_trace
+    from repro.serving.gateway import run_in_thread
+    from repro.telemetry import ClusterTelemetry
+
+    tel = ClusterTelemetry(enabled=True, wall_clock=True)
+    cluster, cfg, _ = _make_cluster(2, telemetry=tel)
+    entries = _smoke_trace(cfg, rate=1.5, duration=3.0, seed=1)
+    assert entries, "empty trace; pick a different seed"
+    handle = run_in_thread(cluster, seed=1)
+    prewarm_done: list = []
+    records = asyncio.run(replay_trace(
+        handle.host, handle.port, entries, speed=2.0, prewarm=1,
+        prewarm_sink=prewarm_done))
+    handle.shutdown(drain=True)
+
+    assert all(r.ok for r in records)
+    stats = cluster.stats
+    assert stats.served == len(entries) + len(prewarm_done)
+    assert stats.cancelled == 0
+    want = (sum(r.attained for r in records)
+            + sum(bool(d and d.get("attained")) for d in prewarm_done))
+    assert stats.attained == want
+    per_cls = tel._per_class_cumulative()
+    for cls in {r.entry.slo_class() for r in records}:
+        rs = [r for r in records if r.entry.slo_class() == cls]
+        fin, att = per_cls[cls]
+        assert fin == len(rs)
+        assert att == sum(r.attained for r in rs)
+    # wall-clock sampler mode was active: export carries real timestamps
+    assert tel.sampler.wall_clock
+    name = next(iter(tel.sampler.wall))
+    t, _ = tel.sampler.wall[name].last()
+    assert t > 1e9                     # epoch seconds, not virtual time
+    assert isinstance(ReplayRecord(entry=entries[0]).ttft, float)
+    assert math.isnan(ReplayRecord(entry=entries[0]).ttft)

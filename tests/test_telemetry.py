@@ -466,3 +466,60 @@ def test_drained_replica_retires_and_stats_survive(tiny_cluster_parts):
     # budget conservation after retirement
     assert cl.budget.used == sum(d.engine.kv.used_pages
                                  for d in cl.drivers)
+
+
+# ------------------ wall-clock export mode (gateway) -------------------- #
+def test_sampler_wall_mode_values_identical_timestamps_wall():
+    """wall_clock=True mirrors every push into a wall-timestamped ring:
+    values (and the virtual rings the autoscaler reads) are identical to
+    a virtual-only sampler; only the exported timestamps differ."""
+    fake_now = [1000.0]
+    virt = TimeSeriesSampler(capacity=8)
+    wall = TimeSeriesSampler(capacity=8, wall_clock=True,
+                             clock=lambda: fake_now[0])
+    for i in range(12):                      # exercise wraparound too
+        fake_now[0] += 0.5
+        for s in (virt, wall):
+            s.push("q", i * 0.1, float(i))
+    assert wall.series["q"].items() == virt.series["q"].items()
+    assert wall.series["q"].values() == wall.wall["q"].values()
+    assert [t for t, _ in wall.wall["q"].items()] == \
+        [1000.0 + 0.5 * (i + 1) for i in range(4, 12)]
+    # last_time: exported base is wall when enabled, virtual otherwise
+    assert virt.last_time("q") == pytest.approx(1.1)
+    assert wall.last_time("q") == pytest.approx(1006.0)
+    assert virt.last_time("missing") is None
+
+
+def test_timeseries_prometheus_virtual_and_wall_consistent():
+    """The exposition from the two modes must carry identical values per
+    series; only the ``_timestamp`` series differs (virtual seconds vs
+    wall epoch)."""
+    from repro.telemetry import timeseries_prometheus_text
+
+    virt = TimeSeriesSampler(capacity=8)
+    wall = TimeSeriesSampler(capacity=8, wall_clock=True,
+                             clock=lambda: 2_000_000_000.0)
+    for s in (virt, wall):
+        s.add_source("a", lambda: 3.5)
+        s.add_source("b", lambda: 7.0)
+        s.sample(0.25)
+        s.sample(0.50)
+    pv = parse_prometheus(timeseries_prometheus_text(virt))
+    pw = parse_prometheus(timeseries_prometheus_text(wall))
+    for name in ("a", "b"):
+        key = ("repro_step_series", (("series", name),))
+        tkey = ("repro_step_series_timestamp", (("series", name),))
+        assert pv[key] == pw[key]            # values identical
+        assert pv[tkey] == pytest.approx(0.50)       # virtual seconds
+        assert pw[tkey] == pytest.approx(2_000_000_000.0)  # wall epoch
+    assert timeseries_prometheus_text(TimeSeriesSampler()) == ""
+
+
+def test_cluster_telemetry_wall_mode_flag_reaches_sampler():
+    tel = ClusterTelemetry(enabled=True, wall_clock=True)
+    assert tel.sampler.wall_clock
+    tel.sampler.push("x", 0.1, 1.0)
+    (t, v), = tel.sampler.wall["x"].items()
+    assert v == 1.0 and t > 1e9              # real epoch timestamp
+    assert tel.sampler.series["x"].items() == [(0.1, 1.0)]
