@@ -20,6 +20,17 @@ Reports the audit counters the shared-prefix pool exposes:
 
 ``--page-granular`` restricts the shared run to page-granular hits
 (pre-token-level behavior) for A/B comparison.
+
+``--spill`` switches to the hierarchical-KV A/B (ISSUE 10): a
+multi-tenant trace whose system-prompt working set EXCEEDS the device
+pool, replayed with the host spill tier off vs on.  Wave 1 warms every
+system prompt (cycling the LRU past capacity); wave 2 re-sends them as
+a tight-TTFT burst.  Spill-off lost the evicted chains — wave 2
+re-prefills in full and the DP declines under the tight deadline;
+spill-on kept them in host RAM — spilled hits discount the residual
+(charged the modeled H2D prefetch latency) and the burst admits.
+``--spill --smoke`` asserts the hit-token and tight-class-attainment
+wins, bit-identical greedy streams, and pool/host budget conservation.
 """
 from __future__ import annotations
 
@@ -92,6 +103,137 @@ def run(share: bool, token_level: bool, reqs, *, max_len: int,
                 heads=eng.kv.partial_head_copies)
 
 
+# ------------------- hierarchical-KV spill A/B (ISSUE 10) ---------------- #
+def build_spill_workload(n_sys: int, sys_len: int, uniq_len: int,
+                         output: int, vocab: int, tight: float,
+                         seed: int = 0):
+    """Oversubscription trace: wave 1 warms each of K system prompts with
+    a relaxed request (cycling the LRU past device capacity).  Wave 2
+    re-sends every system prompt as a tight-TTFT stream over background
+    decode load — the regime where the DP's admission verdict hinges on
+    the cached-prefix discount: a full re-prefill of an evicted chain
+    cannot meet the deadline behind the running decodes, while the short
+    residual of a (device- or host-) resident chain can."""
+    rng = np.random.default_rng(seed)
+    systems = [rng.integers(1, vocab, sys_len).tolist()
+               for _ in range(n_sys)]
+    reqs, rid = [], 0
+    for i, sys_p in enumerate(systems):
+        prompt = sys_p + rng.integers(1, vocab, uniq_len).tolist()
+        reqs.append((simple_request(rid, arrival=0.3 * i,
+                                    prompt=len(prompt), output=output,
+                                    ttft_slowdown=8.0, tpot=0.2),
+                     prompt, False))
+        rid += 1
+    burst = 0.3 * n_sys + 2.0
+    for i in range(2):       # background: long tight-TPOT decodes that
+        prompt = rng.integers(1, vocab, 8).tolist()   # span wave 2
+        reqs.append((simple_request(rid, arrival=burst - 0.2,
+                                    prompt=8, output=12 * n_sys,
+                                    ttft_slowdown=8.0, tpot=0.05),
+                     prompt, False))
+        rid += 1
+    for i, sys_p in enumerate(systems):
+        prompt = sys_p + rng.integers(1, vocab, uniq_len).tolist()
+        reqs.append((simple_request(rid, arrival=burst + 0.3 * i,
+                                    prompt=len(prompt), output=output,
+                                    ttft_slowdown=tight, tpot=0.2),
+                     prompt, True))
+        rid += 1
+    return reqs
+
+
+def run_spill(host_pages: int, reqs, *, max_len: int, total_pages: int,
+              arch: str = "smollm-135m", seed: int = 0):
+    """One replay of the oversubscription trace with the spill tier sized
+    ``host_pages`` (0 = off); asserts pool + host budget conservation."""
+    cfg = get_reduced(arch)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(max_slots=8, max_len=max_len,
+                                     page_size=PAGE,
+                                     total_pages=total_pages,
+                                     share_prefix=True,
+                                     token_level_prefix=True,
+                                     host_spill_pages=host_pages))
+    sched = SLOsServeScheduler(
+        cpu_scale_perf_model(),
+        SchedulerConfig(page_size=PAGE, prefill_emits_first_token=True))
+    fe = ServingFrontend(eng, sched, seed=seed)
+    streams: dict[int, list] = {}
+    for req, prompt, _ in reqs:
+        fe.submit(req, prompt=list(prompt),
+                  on_token=lambda r, t: streams.setdefault(r, []).extend(t))
+    t0 = time.time()
+    stats = fe.run_until_idle()
+    wall = time.time() - t0
+    kv = eng.kv
+    # budget conservation: an idle engine maps nothing, the device pool
+    # partitions into free | cached exactly, and the host tier stays
+    # credit-once within its own budget
+    assert kv.used_pages == 0
+    assert len(kv.free) + len(kv.cached) == kv.total_pages
+    assert kv.host_used == len(kv.host_index) <= max(host_pages, 0)
+    prompt_toks = sum(len(p) for _, p, _ in reqs)
+    tight_reqs = [r for r, _, t in reqs if t]
+    return dict(streams=streams, stats=stats, wall=wall,
+                hits=eng.counters["prefix_hit_tokens"],
+                hit_rate=eng.counters["prefix_hit_tokens"] / prompt_toks,
+                tight_attained=sum(r.slo_attained(sched.zero_load_time)
+                                   for r in tight_reqs),
+                n_tight=len(tight_reqs),
+                evictions=kv.prefix_evictions, spilled=kv.spilled_pages,
+                prefetched=kv.prefetched_pages,
+                spilled_hit_tokens=kv.spilled_hit_tokens,
+                host_evictions=kv.host_evictions)
+
+
+def spill_main(args):
+    cfg = get_reduced("smollm-135m")
+    if args.smoke:
+        n_sys, sys_len, uniq_len, output = 8, 42, 6, 4
+        max_len, total_pages, tight = 64, 64, 1.4
+    else:
+        n_sys, sys_len, uniq_len, output = 12, 50, 8, 8
+        max_len, total_pages, tight = 128, 96, 1.4
+    need = n_sys * -(-sys_len // PAGE)
+    print(f"hierarchical KV A/B: {n_sys} system prompts x {sys_len} tokens "
+          f"(~{need} pages working set) vs {total_pages}-page device pool")
+    res = {}
+    for tag, host in (("spill-off", 0), ("spill-on", 4 * total_pages)):
+        res[tag] = run_spill(
+            host, build_spill_workload(n_sys, sys_len, uniq_len, output,
+                                       cfg.vocab, tight),
+            max_len=max_len, total_pages=total_pages)
+        r = res[tag]
+        print(f"{tag:>10}: hit_rate={r['hit_rate']:.3f} "
+              f"(hits={r['hits']}) tight_ttft_attained="
+              f"{r['tight_attained']}/{r['n_tight']}  "
+              f"evictions={r['evictions']} spilled={r['spilled']} "
+              f"prefetched={r['prefetched']}  wall={r['wall']:.1f}s")
+    off, on = res["spill-off"], res["spill-on"]
+    print(f"hit-rate win: {on['hit_rate']:.3f} vs {off['hit_rate']:.3f}; "
+          f"tight-TTFT attainment win: {on['tight_attained']} vs "
+          f"{off['tight_attained']} of {on['n_tight']}")
+    if args.smoke:
+        assert off["evictions"] > 0, \
+            "smoke: working set must oversubscribe the device pool"
+        assert off["spilled"] == 0 and on["spilled"] > 0
+        assert on["prefetched"] > 0 and on["spilled_hit_tokens"] > 0
+        assert on["hits"] > off["hits"], \
+            "smoke: spill tier must lift the prefix hit-rate"
+        assert on["tight_attained"] > off["tight_attained"], \
+            "smoke: spilled hits must win tight-TTFT admissions"
+        # spill never changes WHAT is generated, only what gets admitted:
+        # every request served in both runs streams identical tokens, and
+        # spill-on serves a superset of spill-off
+        assert set(off["streams"]) <= set(on["streams"])
+        for rid, toks in off["streams"].items():
+            assert on["streams"][rid] == toks, \
+                f"smoke: greedy stream diverged spill on/off (rid {rid})"
+        print("smoke OK")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -99,10 +241,17 @@ def main():
     ap.add_argument("--page-granular", action="store_true",
                     help="restrict the shared run to page-granular hits "
                          "(skip the token-level mode)")
+    ap.add_argument("--spill", action="store_true",
+                    help="hierarchical-KV A/B: host spill tier off vs on "
+                         "over an oversubscribed multi-tenant trace")
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--prompts", type=int, default=3,
                     help="distinct system prompts (K)")
     args = ap.parse_args()
+    if args.spill:
+        if args.page_granular:
+            ap.error("--page-granular is incompatible with --spill")
+        return spill_main(args)
     if args.smoke and args.page_granular:
         ap.error("--page-granular is incompatible with --smoke "
                  "(the smoke asserts compare all three modes)")

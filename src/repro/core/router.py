@@ -32,6 +32,16 @@ class RoutingPolicy:
     # PolyServe-style locality-aware placement.  The event simulator has
     # no token-level cache and ignores the flag.
     prefix_affinity: bool = True
+    # Proactive placement (real cluster, host spill tier on): every
+    # ``placement_interval`` cluster steps, the top-``placement_top_k``
+    # chains by aggregated probe/hit popularity (at least
+    # ``placement_min_hits`` hits) are pushed onto under-loaded replicas'
+    # host tiers, upgrading prefix affinity from organic (hits follow
+    # wherever requests landed) to planned (hot system prompts are
+    # replicated ahead of the load).  0 interval disables the pass.
+    placement_interval: int = 16
+    placement_top_k: int = 4
+    placement_min_hits: int = 2
 
 
 def make_slos_serve_cluster(n_replicas: int, perf: PerfModel,

@@ -121,7 +121,9 @@ class SLOsServeScheduler:
     def plan(self, now: float, running: list[Request], new: list[Request],
              mem_free: int, admission_only: bool = False,
              cached_prefix: Optional[dict[int, int]] = None,
-             live_prefix: Optional[dict[int, int]] = None) -> PlanResult:
+             live_prefix: Optional[dict[int, int]] = None,
+             prefetch_penalty: Optional[dict[int, float]] = None
+             ) -> PlanResult:
         """One scheduler invocation.  ``admission_only`` skips the batch
         materialization (Algorithm 2) — routing verdicts (§4.2) only need
         the DP's admit/decline decision, not the batch timeline.
@@ -143,10 +145,20 @@ class SLOsServeScheduler:
         discounted — they are already counted inside ``mem_free``, and
         discounting them here would double-count the same headroom (which
         is also why the cached_prefix token discount never touches
-        ``m``)."""
+        ``m``).
+
+        ``prefetch_penalty`` maps rid -> seconds of modeled H2D transfer
+        a spilled-prefix hit would trigger
+        (``PagedKVManager.prefetch_seconds``): the cached_prefix discount
+        for host-tier pages is real, but the bytes still have to cross
+        the bus before the residual prefill's attention can read them, so
+        the candidate's first prefill deadline shrinks by that latency —
+        a tight-TTFT request whose discount only exists on the host tier
+        admits honestly or not at all."""
         cfg = self.cfg
         cached_prefix = cached_prefix or {}
         live_prefix = live_prefix or {}
+        prefetch_penalty = prefetch_penalty or {}
         new = sorted(new, key=lambda r: r.arrival)
         deferred = new[cfg.max_new_per_plan:]
         new = new[:cfg.max_new_per_plan]
@@ -195,7 +207,8 @@ class SLOsServeScheduler:
 
         for r in new:
             r.compute_prefill_deadlines(self.zero_load_time)
-            ddl = r.prefill_deadlines[0] - now
+            ddl = (r.prefill_deadlines[0] - now
+                   - prefetch_penalty.get(r.rid, 0.0))
             disc = min(cached_prefix.get(r.rid, 0),
                        r.current_stage.length - 1)
             cands.append(Candidate(

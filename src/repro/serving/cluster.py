@@ -59,6 +59,12 @@ class ClusterStats:
     affinity_routed: int = 0     # first probes placed by prefix affinity
     spec_drafted_tokens: int = 0   # draft proposals verified by targets
     spec_accepted_tokens: int = 0  # of which: accepted (EWMA feed)
+    prefix_evictions: int = 0    # published pages LRU-evicted (or spilled)
+    spilled_pages: int = 0       # of which: retagged into the host tier
+    prefetched_pages: int = 0    # host entries moved back to device pages
+    host_evictions: int = 0      # host-tier LRU drops (eviction is final)
+    spilled_hit_tokens: int = 0  # prompt tokens served via the host tier
+    placed_chains: int = 0       # proactive placement installs (cluster)
 
     # Derived ratios, all guarded against zero-denominator runs (a trace
     # with no terminal requests, no speculation, or no prompts must read
@@ -122,6 +128,8 @@ class ClusterFrontend:
         self._cancelled = 0
         self._prompt_tokens = 0
         self._affinity_routed = 0
+        self._placed_chains = 0
+        self._steps = 0
 
     # ------------------------------------------------------------------ #
     @classmethod
@@ -134,6 +142,7 @@ class ClusterFrontend:
               spec_alpha: Optional[float] = None,
               share_prefix: bool = True,
               token_level_prefix: bool = True,
+              host_spill_pages: int = None, h2d_gbps: float = None,
               telemetry=None, mesh=None,
               devices_per_replica: int = None,
               shard_axes: str = "model") -> "ClusterFrontend":
@@ -181,6 +190,14 @@ class ClusterFrontend:
             added replicas are configured exactly like the initial pool
             (same shared budget, params, and scheduler config)."""
             rep_mesh = mesh if meshes is None else meshes[i % len(meshes)]
+            # host-spill knobs default to the EngineConfig env-driven
+            # defaults (REPRO_HOST_SPILL / REPRO_HOST_SPILL_PAGES) unless
+            # set explicitly here
+            spill_kw = {}
+            if host_spill_pages is not None:
+                spill_kw["host_spill_pages"] = host_spill_pages
+            if h2d_gbps is not None:
+                spill_kw["h2d_gbps"] = h2d_gbps
             eng = ServingEngine(
                 model_cfg, params,
                 EngineConfig(max_slots=max_slots, max_len=max_len,
@@ -188,7 +205,8 @@ class ClusterFrontend:
                              dtype=dtype, seed=seed + i,
                              share_prefix=share_prefix,
                              token_level_prefix=token_level_prefix,
-                             mesh=rep_mesh, shard_axes=shard_axes),
+                             mesh=rep_mesh, shard_axes=shard_axes,
+                             **spill_kw),
                 draft=draft, kv_budget=budget)
             kw = dict(page_size=page_size, prefill_emits_first_token=True)
             if spec_alpha is not None:
@@ -251,6 +269,7 @@ class ClusterFrontend:
             cancelled=base.cancelled + self._cancelled,
             routed=len(self._routed),
             affinity_routed=self._affinity_routed,
+            placed_chains=base.placed_chains + self._placed_chains,
             prompt_tokens=self._prompt_tokens)
         for d in self.drivers:
             s.served += d.stats.served
@@ -265,6 +284,12 @@ class ClusterFrontend:
             s.spec_drafted_tokens += d.engine.counters["spec_drafted_tokens"]
             s.spec_accepted_tokens += (
                 d.engine.counters["spec_accepted_tokens"])
+            kv = d.engine.kv
+            s.prefix_evictions += kv.prefix_evictions
+            s.spilled_pages += kv.spilled_pages
+            s.prefetched_pages += kv.prefetched_pages
+            s.host_evictions += kv.host_evictions
+            s.spilled_hit_tokens += kv.spilled_hit_tokens
         return s
 
     # ----------------------------- routing ----------------------------- #
@@ -288,7 +313,12 @@ class ClusterFrontend:
         hits = [-1 if d.idx in self.draining
                 else d.engine.kv.probe_prefix(p.prompt)
                 for d in self.drivers]
-        best = int(np.argmax(hits))
+        # equal hits break toward the emptier replica (then lowest index,
+        # for determinism): proactive placement put the hot chain on an
+        # under-loaded peer precisely so affinity would move load there
+        best = max(range(n),
+                   key=lambda i: (hits[i],
+                                  self.drivers[i].engine.kv.free_pages, -i))
         if hits[best] <= 0:
             return rr
         self._affinity_routed += 1
@@ -407,7 +437,10 @@ class ClusterFrontend:
         into the retained base so cluster totals never move backwards.
         An idle replica holds no live pages, and its cached (zero-ref)
         prefix pages already credited the shared budget at unref, so
-        removal cannot leak budget."""
+        removal cannot leak budget.  The victim's published chains spill
+        to a surviving replica's host tier first — a drain removes
+        capacity, it must not also erase the prefix working set."""
+        self._spill_chains_to_survivors(d)
         s = self._retired
         s.served += d.stats.served
         s.attained += d.stats.attained
@@ -420,12 +453,78 @@ class ClusterFrontend:
         s.partial_hit_tokens += d.engine.kv.partial_hit_tokens
         s.spec_drafted_tokens += d.engine.counters["spec_drafted_tokens"]
         s.spec_accepted_tokens += d.engine.counters["spec_accepted_tokens"]
+        kv = d.engine.kv
+        s.prefix_evictions += kv.prefix_evictions
+        s.spilled_pages += kv.spilled_pages
+        s.prefetched_pages += kv.prefetched_pages
+        s.host_evictions += kv.host_evictions
+        s.spilled_hit_tokens += kv.spilled_hit_tokens
         self.drivers.remove(d)
         self.draining.discard(d.idx)
         if self.telemetry is not None:
             self.telemetry.tracer.emit(
                 {"kind": "retire", "t": round(self.clock, 6),
                  "replica": d.idx})
+
+    def _spill_chains_to_survivors(self, d: ReplicaDriver) -> None:
+        """Export every chain resident on ``d`` (device or host tier) into
+        the emptiest live peer's host tier.  Installs are idempotent and
+        capped by the target's own host budget (its LRU decides what
+        survives); targets with the spill tier off simply decline."""
+        targets = [x for x in self.drivers
+                   if x is not d and x.idx not in self.draining]
+        if not targets:
+            return
+        kv = d.engine.kv
+        for h in kv.root_chains():
+            dst = max(targets, key=lambda x: x.engine.kv.free_pages)
+            dst.engine.kv.install_host_chain(kv.export_chain(h))
+
+    # ----------------------- proactive placement ----------------------- #
+    def _placement_pass(self, now: float) -> None:
+        """Periodic proactive prefix placement (the planned-affinity
+        upgrade of ``RoutingPolicy.prefix_affinity``): aggregate per-chain
+        probe/hit popularity across replicas, take the top-K hot chains,
+        and install each onto under-loaded live replicas that do not hold
+        it — via the host tier, so placement costs no device pages until
+        a request actually hits the chain there.  Popularity decays by
+        half each pass, keeping the ranking recent."""
+        pol = self.policy
+        counts: dict[int, int] = {}
+        live = [d for d in self.drivers if d.idx not in self.draining]
+        for d in live:
+            for h, c in d.engine.kv.chain_hits.items():
+                counts[h] = counts.get(h, 0) + c
+        hot = sorted((h for h, c in counts.items()
+                      if c >= pol.placement_min_hits),
+                     key=lambda h: (-counts[h], h))[:pol.placement_top_k]
+        for h in hot:
+            holder = next(
+                (d for d in live
+                 if h in d.engine.kv.prefix_index
+                 or h in d.engine.kv.host_index), None)
+            if holder is None:
+                continue
+            chain = None            # export lazily, once per hot chain
+            for d in live:
+                kv = d.engine.kv
+                if d is holder or kv.host_spill_pages <= 0 \
+                        or h in kv.prefix_index or h in kv.host_index:
+                    continue
+                if kv.free_pages * 2 < kv.total_pages:
+                    continue        # loaded replica: placement would thrash
+                if chain is None:
+                    chain = holder.engine.kv.export_chain(h)
+                placed = kv.install_host_chain(chain)
+                if placed and self.telemetry is not None:
+                    self.telemetry.tracer.emit(
+                        {"kind": "place", "t": round(now, 6),
+                         "replica": d.idx, "pages": placed})
+                self._placed_chains += 1 if placed else 0
+        for d in live:
+            d.engine.kv.chain_hits = {
+                h: c // 2 for h, c in d.engine.kv.chain_hits.items()
+                if c // 2 > 0}
 
     # ------------------------------------------------------------------ #
     def step(self, max_batches: int = 8) -> int:
@@ -473,6 +572,11 @@ class ClusterFrontend:
             for d in list(self.drivers):
                 if d.idx in self.draining and d.idle:
                     self._retire(d)
+        self._steps += 1
+        if self.policy.prefix_affinity and self.policy.placement_interval \
+                and self._steps % self.policy.placement_interval == 0 \
+                and len(self.drivers) > 1:
+            self._placement_pass(self.clock)
         if self.telemetry is not None:
             self.telemetry.on_step(self, self.clock, n_exec)
             if self.autoscaler is not None:

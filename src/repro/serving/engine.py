@@ -61,6 +61,13 @@ def _env_flag(name: str, default: bool) -> bool:
     return default if v is None else v.lower() not in ("0", "false", "off")
 
 
+def _env_int(name: str, default: int) -> int:
+    """Integer-valued env override, same read-per-instantiation contract
+    as ``_env_flag``."""
+    v = os.environ.get(name)
+    return default if v is None else int(v)
+
+
 @dataclasses.dataclass
 class EngineConfig:
     max_slots: int = 8                # max concurrent sequences
@@ -88,6 +95,18 @@ class EngineConfig:
     # shaved reservation extends on demand (with the usual best-effort
     # preemption pressure valve) — more admissions, some thrash risk.
     prefix_aware_admission: bool = False
+    # Hierarchical KV: host-RAM spill tier for the prefix cache.  > 0
+    # makes LRU-evicted published chains spill to pinned host buffers
+    # (that many pages of host budget) and prefetch back async on a hit
+    # (kvcache.py "Hierarchical KV").  REPRO_HOST_SPILL=1 turns it on at
+    # the default budget; REPRO_HOST_SPILL_PAGES sets an explicit one.
+    host_spill_pages: int = dataclasses.field(
+        default_factory=lambda: _env_int(
+            "REPRO_HOST_SPILL_PAGES",
+            256 if _env_flag("REPRO_HOST_SPILL", False) else 0))
+    # Modeled host→device bandwidth for the spilled-hit prefetch-latency
+    # admission term (PagedKVManager.prefetch_seconds).
+    h2d_gbps: float = 16.0
     # Mesh-sharded serving: a jax.sharding.Mesh makes this engine execute
     # its three jitted programs under shard_map over ``shard_axes`` —
     # head-sharded GQA attention, expert-parallel MoE, column-sharded
@@ -131,7 +150,9 @@ class ServingEngine:
                                  dtype=self.ecfg.dtype,
                                  budget=kv_budget,
                                  share_prefix=self.ecfg.share_prefix,
-                                 token_level=self.ecfg.token_level_prefix)
+                                 token_level=self.ecfg.token_level_prefix,
+                                 host_spill_pages=self.ecfg.host_spill_pages,
+                                 h2d_gbps=self.ecfg.h2d_gbps)
         self.reqs: dict[int, RequestCtx] = {}
         self.key = jax.random.PRNGKey(self.ecfg.seed)
         self._moe_cf = (float(cfg.moe.n_experts) / cfg.moe.top_k
@@ -483,6 +504,12 @@ class ServingEngine:
         preempt best-effort victims (freeing real device pages) before the
         engine retries — failing that, prefill raises and decode caps its
         step budget, exactly as without the callback."""
+        # Overlap point for the host spill tier: admissions queued H2D
+        # prefetches; dispatch them all now as one async device copy, then
+        # do the host-side prefill grouping while the transfer is in
+        # flight (the functional pool update gives the prefill programs a
+        # data dependency on the prefetched content — never a stale read).
+        self.kv.flush_prefetch()
         emitted: dict[int, list] = {}
         self.last_prefill_progress = {}
         self.last_spec_stats = {}

@@ -190,39 +190,47 @@ class ReplicaDriver:
         scheduler admit ``req`` against its live state right now?  With
         ``prompt``, the probe credits this replica's cached prefix — the
         verdict a prefix-affinity hop is after."""
-        cached, live = self._discounts([req], prompt)
+        cached, live, pen = self._discounts([req], prompt)
         res = self.sched.plan(now, self.running, [req], self._mem_free(),
                               admission_only=True,
-                              cached_prefix=cached, live_prefix=live)
+                              cached_prefix=cached, live_prefix=live,
+                              prefetch_penalty=pen)
         return any(r.rid == req.rid for r in res.admitted)
 
     def _discounts(self, reqs: list[Request],
                    prompt: Optional[list] = None
-                   ) -> tuple[Optional[dict], Optional[dict]]:
+                   ) -> tuple[Optional[dict], Optional[dict],
+                              Optional[dict]]:
         """Cached-prefix discounts for the DP planner: per request, the
-        token-exact resident-prompt hit (discounts prefill tokens) and
-        the matched pages other requests currently map (discounts memory
-        units — cached zero-ref matches already sit inside ``mem_free``).
-        One ``prefix_discounts`` chain walk yields both.  Pages resident
-        only in the best-effort tier are excluded from the memory
-        discount: ``_mem_free`` already counts them as preemptable-free
-        supply, and one page must never discount demand and inflate
-        supply at once."""
+        token-exact resident-prompt hit (discounts prefill tokens), the
+        matched pages other requests currently map (discounts memory
+        units — cached zero-ref matches already sit inside ``mem_free``),
+        and the modeled H2D prefetch latency when part of the hit lives
+        in the host spill tier (charged against the request's first
+        prefill deadline so tight-TTFT admission stays honest about the
+        transfer it would trigger).  One ``prefix_discounts`` chain walk
+        yields all three.  Pages resident only in the best-effort tier
+        are excluded from the memory discount: ``_mem_free`` already
+        counts them as preemptable-free supply, and one page must never
+        discount demand and inflate supply at once."""
         kv = self.engine.kv
         be_pages = self._be_page_set()
-        toks, pages = {}, {}
+        toks, pages, pen = {}, {}, {}
         for r in reqs:
             if r.rid in self.encs:
                 continue      # enc-conditioned prompts never share
             pr = prompt if prompt is not None else self.prompts.get(r.rid)
             if pr is None:
                 continue
-            hit, live = kv.prefix_discounts(pr, exclude_pages=be_pages)
+            hit, live, spilled = kv.prefix_discounts(
+                pr, exclude_pages=be_pages)
             if hit:
                 toks[r.rid] = hit
             if live:
                 pages[r.rid] = live
-        return toks or None, pages or None
+            if spilled:
+                pen[r.rid] = kv.prefetch_seconds(spilled)
+        return toks or None, pages or None, pen or None
 
     def _mem_free(self) -> int:
         # pages reclaimable by preempting the best-effort tier count as
@@ -252,12 +260,13 @@ class ReplicaDriver:
         res = DriveResult()
         arrivals = [r for r in self.new_q if r.arrival <= now]
         self.new_q = [r for r in self.new_q if r.arrival > now]
-        cached, live = self._discounts(arrivals)
+        cached, live, pen = self._discounts(arrivals)
         t0 = time.perf_counter()
         with self._span("plan", replica=self.idx):
             plan = self.sched.plan(now, self.running, arrivals,
                                    self._mem_free(),
-                                   cached_prefix=cached, live_prefix=live)
+                                   cached_prefix=cached, live_prefix=live,
+                                   prefetch_penalty=pen)
         if self.tel is not None:
             self.tel.on_plan(time.perf_counter() - t0, plan.admitted,
                              plan.declined, plan.deferred)

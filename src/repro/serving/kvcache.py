@@ -74,9 +74,42 @@ request, §2.1 scenarios):
   them.  ``free_pages`` therefore counts free + cached (both allocatable
   now), and an idle pool with warm cache still reports
   ``used_pages == 0``.
+
+Hierarchical KV: the host spill tier (``host_spill_pages > 0``)
+---------------------------------------------------------------
+Without it, LRU eviction is final — the prefix cache dies at HBM
+capacity.  With a host tier, a chain's life cycle gains one more state:
+
+* **Spill.**  When ``_grab_pages`` evicts a zero-refcount cached page,
+  its contents are device→host copied into a pinned host entry and the
+  chain-hash index entry is retagged SPILLED (``host_index``, an LRU
+  with its own page budget) instead of vanishing.  A chain hash lives in
+  the device index OR the host index, never both.
+* **Prefetch.**  A ``probe_prefix``/``admit``/``resume`` hit that walks
+  into spilled entries grabs one fresh device page per entry, re-publishes
+  it under the chain hash (removing the host entry), splices it into the
+  block table — and DEFERS the H2D copy (``_pending_prefetch``).
+  ``flush_prefetch`` later executes all queued copies as one jitted
+  donated scatter; JAX async dispatch overlaps the transfer with the
+  engine's host-side residual-prefill planning, and the functional pool
+  update gives every subsequent device program a data dependency on the
+  prefetched content, so nothing can read a stale page.
+* **Honest probes.**  ``prefix_discounts`` charges each spilled entry one
+  grabbable page (physical AND budget) — exactly what ``_share_pages``
+  pays to deliver it — and reports the spilled-page count so the planner
+  can charge an H2D prefetch-latency term against tight TTFT deadlines.
+* **Transfer.**  ``export_chain``/``install_host_chain`` move whole
+  published chains between managers through the host tier (cluster-level
+  proactive placement and drain-time spill-to-survivors);
+  ``chain_hits`` counts per-root-chain probe popularity to drive it.
+
+Greedy streams are bit-identical with the host tier on or off: a
+prefetched page holds exactly the bytes the evicted page held, at the
+same positions.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 from collections import OrderedDict
@@ -95,6 +128,40 @@ def _copy_bucket(n: int, buckets=(1, 2, 4, 8)) -> int:
         if n <= b:
             return b
     return ((n + 7) // 8) * 8
+
+
+@dataclasses.dataclass
+class _HostEntry:
+    """One spilled page in the host tier: the chain metadata needed to
+    re-verify a match (``parent`` hash + exact ``chunk`` tokens) and the
+    page contents as per-segment host (numpy) arrays aligned with the
+    manager's pool segments (``()`` placeholder for unpaged segments)."""
+    parent: Optional[int]
+    chunk: tuple
+    data: list
+
+
+@functools.partial(jax.jit, static_argnums=(1,), donate_argnums=(0,))
+def _host_load_prog(pools, axes, di, vals):
+    """Scatter host page contents ``vals`` onto device pages ``di`` in
+    every paged pool leaf — the H2D prefetch counterpart of
+    ``_copy_pages_prog``.  ``vals[seg]`` leaves are stacked on the page
+    axis (``axes[seg]``); the pool argument is DONATED so XLA writes the
+    few pages in place.  Padding repeats the last real (page, value)
+    pair: a duplicate scatter index rewriting the same value stays
+    deterministic."""
+    out = []
+    for pool, ax, v in zip(pools, axes, vals):
+        if ax is None:
+            out.append(pool)
+            continue
+
+        def ld(leaf, x, ax=ax):
+            if ax == 0:
+                return leaf.at[di].set(x.astype(leaf.dtype))
+            return leaf.at[:, di].set(x.astype(leaf.dtype))
+        out.append(jax.tree.map(ld, pool, v))
+    return out
 
 
 @functools.partial(jax.jit, static_argnums=(1,), donate_argnums=(0,))
@@ -255,9 +322,11 @@ class PagedKVManager(PageAllocator):
                  page_size: int = 16, max_seqs: int = 8,
                  max_len: int = 512, dtype=jnp.float32,
                  budget: Optional[SharedPageBudget] = None,
-                 share_prefix: bool = False, token_level: bool = True):
+                 share_prefix: bool = False, token_level: bool = True,
+                 host_spill_pages: int = 0, h2d_gbps: float = 16.0):
         super().__init__(total_pages, page_size, budget=budget)
         self.cfg = cfg
+        self.dtype = dtype
         self.max_seqs = max_seqs
         self.max_len = max_len
         self.max_pages_per_seq = max(1, math.ceil(max_len / page_size))
@@ -284,9 +353,30 @@ class PagedKVManager(PageAllocator):
         # per-rid registration cursor: (full pages processed, chain hash
         # there) so repeated register_prefix calls hash incrementally
         self._reg_state: dict[int, tuple[int, Optional[int]]] = {}
+        # ---- host spill tier (module docstring, "Hierarchical KV") ----
+        # entries live in the device index OR here, never both; the tier
+        # is sharing-scoped (no sharing -> nothing publishable to spill)
+        self.host_spill_pages = host_spill_pages if self.share_prefix else 0
+        self.h2d_gbps = h2d_gbps
+        self.host_index: OrderedDict[int, _HostEntry] = OrderedDict()
+        # explicit credit-once mirror of the host budget (the property
+        # harness asserts host_used == len(host_index), mirroring the
+        # SharedPageBudget conservation invariant on the device side)
+        self.host_used = 0
+        # queued H2D copies: (device page, host entry) — flushed as one
+        # donated scatter by flush_prefetch (engine: top of execute())
+        self._pending_prefetch: list[tuple[int, _HostEntry]] = []
+        # per-root-chain probe/hit popularity (first-page chain hash) —
+        # the cluster's proactive-placement signal
+        self.chain_hits: dict[int, int] = {}
         self.cow_copies = 0
         self.pages_grabbed = 0
         self.prefix_evictions = 0
+        self.spilled_pages = 0         # device pages spilled to host
+        self.prefetched_pages = 0      # host entries prefetched to device
+        self.host_evictions = 0        # host-tier LRU evictions (final)
+        self.spilled_hit_tokens = 0    # hit tokens delivered via prefetch
+        self.prefetch_flushes = 0      # jitted H2D scatter calls
         self.partial_head_copies = 0   # boundary pages CoW'd for a head hit
         self.partial_hit_tokens = 0    # hit tokens beyond full-page chains
         # head tokens mapped by the LAST _share_pages, committed to
@@ -330,8 +420,10 @@ class PagedKVManager(PageAllocator):
 
     def _grab_pages(self, n: int) -> Optional[list[int]]:
         """Take n physical pages: free list first, then LRU eviction of
-        zero-refcount cached pages (unpublishing them).  Reserves the
-        shared budget; None (nothing taken) if pages or budget are short."""
+        zero-refcount cached pages.  An evicted page spills to the host
+        tier (when enabled) before being unpublished, so the chain stays
+        matchable.  Reserves the shared budget; None (nothing taken) if
+        pages or budget are short."""
         if n <= 0:
             return []
         if n > len(self.free) + len(self.cached):
@@ -343,12 +435,20 @@ class PagedKVManager(PageAllocator):
             if self.free:
                 p = self.free.pop()
             else:
-                p, _ = self.cached.popitem(last=False)     # LRU victim
+                p, key = self.cached.popitem(last=False)   # LRU victim
+                self._spill(p, key)
                 self._unpublish(p)
                 self.prefix_evictions += 1
             self.refcount[p] = 1
             out.append(p)
         self.pages_grabbed += n
+        if self._pending_prefetch:
+            # a re-grabbed page must not receive a stale queued H2D copy
+            # (its chain data was already re-spilled from the queue above)
+            outset = set(out)
+            self._pending_prefetch = [(q, e) for q, e in
+                                      self._pending_prefetch
+                                      if q not in outset]
         return out
 
     def _unref(self, p: int) -> int:
@@ -512,6 +612,179 @@ class PagedKVManager(PageAllocator):
         have = len(self.tables.get(rid, []))
         return min(self.max_len, (have + self.free_pages) * self.page_size)
 
+    # ------------------------- host spill tier -------------------------- #
+    def _paged_axes(self) -> tuple:
+        """Per-segment page axis of the pool leaves (None = unpaged SSM
+        lane state; 1 when the segment spans n>1 layers)."""
+        return tuple(None if kind == "ssm" else (1 if n > 1 else 0)
+                     for kind, n in self.cfg.segments())
+
+    def _page_to_host(self, p: int) -> list:
+        """Device→host copy of page ``p``'s contents, one numpy pytree per
+        paged segment (``()`` for unpaged segments)."""
+        out = []
+        for pool, ax in zip(self.pools, self._paged_axes()):
+            if ax is None:
+                out.append(())
+            elif ax == 0:
+                out.append(jax.tree.map(
+                    lambda leaf: np.asarray(leaf[p]), pool))
+            else:
+                out.append(jax.tree.map(
+                    lambda leaf: np.asarray(leaf[:, p]), pool))
+        return out
+
+    def _spill(self, p: int, key: int) -> None:
+        """Retag an LRU-evicted published page as SPILLED: its contents
+        move to a host entry under the same chain hash, so the chain stays
+        matchable after the device page is reallocated.  A page whose own
+        H2D prefetch is still queued spills from the queued host copy (the
+        device page may not hold the bytes yet)."""
+        if self.host_spill_pages <= 0:
+            return
+        chunk = self.page_tokens.get(p)
+        if chunk is None:
+            return
+        data = None
+        for q, e in self._pending_prefetch:
+            if q == p:
+                data = e.data
+                break
+        if data is None:
+            data = self._page_to_host(p)
+        self._host_insert(key, _HostEntry(self.page_parent.get(p),
+                                          chunk, data))
+        self.spilled_pages += 1
+
+    def _host_insert(self, key: int, entry: _HostEntry) -> bool:
+        """Insert a host entry under its own LRU budget, evicting the
+        oldest entries first (a host eviction is final)."""
+        if self.host_spill_pages <= 0:
+            return False
+        if key in self.host_index:
+            self.host_index.move_to_end(key)
+            return False
+        while self.host_used >= self.host_spill_pages:
+            self.host_index.popitem(last=False)
+            self.host_used -= 1
+            self.host_evictions += 1
+        self.host_index[key] = entry
+        self.host_used += 1
+        return True
+
+    def _prefetch_page(self, h: int, parent: Optional[int],
+                       chunk: tuple) -> Optional[int]:
+        """Move a spilled chain entry host→device: grab one fresh device
+        page, re-publish it under the chain hash (``_publish`` removes the
+        host entry — a chain is never device-published and spilled at
+        once), and queue the H2D copy for ``flush_prefetch``.  None when
+        pages or budget are short — the hit truncates there, exactly as
+        ``prefix_discounts`` promised."""
+        entry = self.host_index.get(h)
+        if entry is None:
+            return None
+        fresh = self._grab_pages(1)
+        if fresh is None:
+            return None
+        q = fresh[0]
+        self._pending_prefetch.append((q, entry))
+        self._publish(q, h, parent, chunk)
+        self.prefetched_pages += 1
+        self.spilled_hit_tokens += len(chunk)
+        return q
+
+    def flush_prefetch(self) -> int:
+        """Execute every queued host→device page copy as ONE jitted
+        donated scatter; returns pages copied.  The copy is deferred from
+        the admit/resume that queued it: the engine flushes at the top of
+        ``execute()``, JAX async dispatch overlaps the transfer with the
+        host-side residual-prefill grouping, and the functional pool
+        update gives every later device program a data dependency on the
+        prefetched content — the residual prefill is never blocked on the
+        H2D copy, and can never read a stale page."""
+        if not self._pending_prefetch:
+            return 0
+        pend, self._pending_prefetch = self._pending_prefetch, []
+        axes = self._paged_axes()
+        B = _copy_bucket(len(pend))
+        pend_p = pend + [pend[-1]] * (B - len(pend))
+        di = jnp.asarray([q for q, _ in pend_p], jnp.int32)
+        vals = []
+        for i, ax in enumerate(axes):
+            if ax is None:
+                vals.append(())
+                continue
+            vals.append(jax.tree.map(
+                lambda *xs, ax=ax: np.stack(xs, axis=ax),
+                *[e.data[i] for _, e in pend_p]))
+        self.pools = _host_load_prog(self.pools, axes, di, vals)
+        self.prefetch_flushes += 1
+        return len(pend)
+
+    def prefetch_seconds(self, n_pages: int) -> float:
+        """Modeled H2D latency of prefetching ``n_pages`` spilled pages —
+        the term the DP planner charges against a spilled hit's TTFT
+        deadline so tight-class admission stays honest."""
+        if n_pages <= 0:
+            return 0.0
+        return (n_pages * kv_page_bytes(self.cfg, self.page_size, self.dtype)
+                / (self.h2d_gbps * 1e9))
+
+    # -------------------- cross-manager chain transfer ------------------ #
+    def root_chains(self) -> list[int]:
+        """Chain hashes of every resident first-page entry (device or
+        host) — the exportable chain roots."""
+        roots = [self.page_key[p] for p in self.children.get(None, ())]
+        roots += [h for h, e in self.host_index.items() if e.parent is None]
+        return roots
+
+    def export_chain(self, h: int) -> list[tuple]:
+        """Export the published chain rooted at hash ``h`` as host-tier
+        entries ``(hash, parent, chunk, data)``, walking device and host
+        entries alike (D2H-copying device pages).  Linear chains only: a
+        branching chain exports its smallest-page-id branch, for
+        determinism."""
+        self.flush_prefetch()      # device reads below must see content
+        out: list[tuple] = []
+        while h is not None and len(out) < self.max_pages_per_seq:
+            p = self.prefix_index.get(h)
+            if p is not None:
+                out.append((h, self.page_parent.get(p),
+                            self.page_tokens.get(p), self._page_to_host(p)))
+            elif h in self.host_index:
+                e = self.host_index[h]
+                out.append((h, e.parent, e.chunk, e.data))
+            else:
+                break
+            nxt = None
+            kids = self.children.get(h)
+            if kids:
+                nxt = self.page_key[min(kids)]
+            else:
+                for hh, e in self.host_index.items():
+                    if e.parent == h:
+                        nxt = hh
+                        break
+            h = nxt
+        return out
+
+    def install_host_chain(self, entries: list[tuple]) -> int:
+        """Install exported chain entries into this manager's HOST tier
+        (proactive placement / drain-time spill-to-survivors).  Hashes
+        already resident — device-published or spilled — are skipped, so
+        installs are idempotent and never violate the never-both
+        invariant.  Returns entries installed."""
+        if self.host_spill_pages <= 0 or not self.share_prefix:
+            return 0
+        n = 0
+        for h, parent, chunk, data in entries:
+            if h in self.prefix_index or h in self.host_index \
+                    or chunk is None:
+                continue
+            if self._host_insert(h, _HostEntry(parent, tuple(chunk), data)):
+                n += 1
+        return n
+
     # ------------------------- prefix sharing --------------------------- #
     @staticmethod
     def _chain(parent: Optional[int], chunk) -> int:
@@ -542,43 +815,66 @@ class PagedKVManager(PageAllocator):
         return self.prefix_discounts(tokens, exclude_pages)[1]
 
     def prefix_discounts(self, tokens,
-                         exclude_pages=None) -> tuple[int, int]:
-        """One chain walk returning ``(probe hit tokens, live pages)`` —
-        the planner needs both every tick, and walking/hash-verifying the
-        chain twice would double the host-side cost for long prompts."""
-        pages, hit, partial = self._match_pages(tokens)
-        live = int(sum(1 for p in pages if self.refcount[p] > 0
+                         exclude_pages=None) -> tuple[int, int, int]:
+        """One chain walk returning ``(probe hit tokens, live pages,
+        spilled pages)`` — the planner needs all three every tick, and
+        walking/hash-verifying the chain twice would double the host-side
+        cost for long prompts.  ``spilled`` counts the host-tier entries
+        inside the hit, each of which costs one fresh device page to
+        deliver (mirrored below) and one page of H2D transfer the planner
+        charges as a prefetch-latency deadline term."""
+        matches, hit, partial = self._match_pages(tokens)
+        live = int(sum(1 for m in matches if m[0] is not None
+                       and self.refcount[m[0]] > 0
                        and (exclude_pages is None
-                            or p not in exclude_pages)))
-        if not pages and partial is None:
-            return 0, live
+                            or m[0] not in exclude_pages)))
+        if not matches and partial is None:
+            return 0, live, 0
         avail = self.budget.available if self.budget is not None else None
         phys = len(self.free) + len(self.cached)
         usable = 0
-        for p in pages:
-            if self.refcount[p] > 0:
+        spilled = 0
+        for p, _, _, _ in matches:
+            if p is not None and self.refcount[p] > 0:
                 usable += 1
-            elif avail is None or avail > 0:
-                if avail is not None:
-                    avail -= 1
-                phys -= 1          # revived out of the cached pool
-                usable += 1
+            elif p is not None:
+                # cached revival: one budget page; the page leaves the pool
+                if avail is None or avail > 0:
+                    if avail is not None:
+                        avail -= 1
+                    phys -= 1
+                    usable += 1
+                else:
+                    partial = None   # _share_pages truncates the same way
+                    break
             else:
-                partial = None     # _share_pages truncates the same way
-                break
+                # spilled entry: prefetch needs one freshly grabbed device
+                # page — physical AND budget (_prefetch_page's grab)
+                if phys > 0 and (avail is None or avail > 0):
+                    if avail is not None:
+                        avail -= 1
+                    phys -= 1
+                    usable += 1
+                    spilled += 1
+                else:
+                    partial = None
+                    break
         out = min(hit, usable * self.page_size)
         # the boundary head needs one grabbable page: free/cached beyond
         # the revivals above, plus one budget page (_cow_head's grab)
         if partial is not None and out == hit and phys > 0 \
                 and (avail is None or avail > 0):
             out += partial[1]
-        return out, live
+        return out, live, spilled
 
-    def _match_pages(self, tokens) -> tuple[list[int], int,
+    def _match_pages(self, tokens) -> tuple[list[tuple], int,
                                             Optional[tuple[int, int]]]:
-        """(pages, hit_tokens, partial) of the longest published chain for
-        ``tokens``.  ``pages`` are full-page chain matches; ``hit`` is
-        their token count capped at ``len(tokens) - 1`` (when the cap
+        """(matches, hit_tokens, partial) of the longest published chain
+        for ``tokens``, walking the device index and the host spill tier
+        as ONE chain.  Each match is ``(page_or_None, chain_hash, parent,
+        chunk)`` — page is None for a spilled (host-resident) link, which
+        ``_share_pages`` delivers via ``_prefetch_page``.  ``hit`` is the
+        matched token count capped at ``len(tokens) - 1`` (when the cap
         bites mid-chain, the last page is consumed partially and its
         overwrite goes through CoW — ``partial`` is None there).
         ``partial = (donor_page, head_len)`` extends an uncapped chain
@@ -586,22 +882,32 @@ class PagedKVManager(PageAllocator):
         if not self.share_prefix or tokens is None or len(tokens) < 2:
             return [], 0, None
         ps = self.page_size
-        h, pages = None, []
+        h, matches = None, []
         for i in range(len(tokens) // ps):
             chunk = tuple(int(t) for t in tokens[i * ps:(i + 1) * ps])
             nh = self._chain(h, chunk)
             p = self.prefix_index.get(nh)
-            # hash match alone is not proof: verify the page's exact
+            # hash match alone is not proof: verify the entry's exact
             # tokens so a 64-bit chain collision can never map another
             # prompt's KV (it degrades to a miss instead)
-            if p is None or self.page_tokens.get(p) != chunk:
-                break
+            if p is not None and self.page_tokens.get(p) == chunk:
+                matches.append((p, nh, h, chunk))
+            else:
+                he = self.host_index.get(nh)
+                if he is None or he.chunk != chunk:
+                    break
+                matches.append((None, nh, h, chunk))
             h = nh
-            pages.append(p)
-        hit = min(len(pages) * ps, len(tokens) - 1)
-        if hit < len(pages) * ps:
-            return pages[:self.pages_needed(hit) if hit else 0], hit, None
-        return pages, hit, self._match_head(h, tokens, hit)
+        if matches:
+            # root-chain popularity feeds the cluster's proactive
+            # placement pass (hot system prompts → under-loaded replicas)
+            root = matches[0][1]
+            self.chain_hits[root] = self.chain_hits.get(root, 0) + 1
+        hit = min(len(matches) * ps, len(tokens) - 1)
+        if hit < len(matches) * ps:
+            return (matches[:self.pages_needed(hit) if hit else 0],
+                    hit, None)
+        return matches, hit, self._match_head(h, tokens, hit)
 
     def _match_head(self, parent: Optional[int], tokens,
                     start: int) -> Optional[tuple[int, int]]:
@@ -641,9 +947,18 @@ class PagedKVManager(PageAllocator):
         (a fresh, private, unpublished page) and counts only the verified
         head tokens."""
         self._partial_pending = 0
-        pages, hit, partial = self._match_pages(tokens)
+        matches, hit, partial = self._match_pages(tokens)
         taken: list[int] = []
-        for p in pages:
+        for p, nh, parent, chunk in matches:
+            if p is None:
+                # spilled link: queue an async H2D prefetch into a fresh
+                # device page (republished immediately; data lands at the
+                # next flush_prefetch(), before any device program reads)
+                q = self._prefetch_page(nh, parent, chunk)
+                if q is None:   # device pages or budget short: truncate
+                    break
+                taken.append(q)   # _grab_pages already set refcount = 1
+                continue
             if self.refcount[p] > 0:
                 self.refcount[p] += 1
             elif self.budget is None or self.budget.reserve(1):
@@ -652,7 +967,7 @@ class PagedKVManager(PageAllocator):
             else:
                 break
             taken.append(p)
-        if len(taken) < len(pages):
+        if len(taken) < len(matches):
             hit = min(hit, len(taken) * self.page_size)
             partial = None
         if partial is not None:
@@ -713,12 +1028,17 @@ class PagedKVManager(PageAllocator):
                  chunk: tuple) -> None:
         """Insert page p into the prefix index under chain hash ``h``,
         recording its parent link so token-level boundary matching can
-        enumerate the chain's published extensions."""
+        enumerate the chain's published extensions.  A host-tier entry
+        for the same chain is dropped: a chain is never simultaneously
+        device-published and spilled (the device copy is authoritative
+        and the host bytes are now redundant)."""
         self.prefix_index[h] = p
         self.page_key[p] = h
         self.page_tokens[p] = chunk
         self.page_parent[p] = parent
         self.children.setdefault(parent, set()).add(p)
+        if self.host_index.pop(h, None) is not None:
+            self.host_used -= 1
 
     def _unpublish(self, p: int) -> None:
         """Remove page p from the prefix index (CoW overwrite or LRU
@@ -815,9 +1135,10 @@ class PagedKVManager(PageAllocator):
         Copy counts are bucketed — padded by repeating the last real
         (src, dst) pair, which rewrites the same value and so stays
         deterministic under duplicate scatter indices — so CoW batch
-        sizes share compilations."""
-        axes = tuple(None if kind == "ssm" else (1 if n > 1 else 0)
-                     for kind, n in self.cfg.segments())
+        sizes share compilations.  Pending prefetches flush first: a CoW
+        source may be a prefetched page whose H2D copy is still queued."""
+        self.flush_prefetch()
+        axes = self._paged_axes()
         B = _copy_bucket(len(src))
         pad = B - len(src)
         si = jnp.asarray(src + [src[-1]] * pad, jnp.int32)
@@ -833,7 +1154,9 @@ class PagedKVManager(PageAllocator):
     def lane_cache(self, slots):
         """Per-call cache pytree: page pools pass through whole (they are
         global, addressed by block tables); SSM lane state is gathered to
-        one row per batch lane."""
+        one row per batch lane.  Flushes pending prefetches so the view
+        never exposes a page whose H2D copy is still queued."""
+        self.flush_prefetch()
         idx = jnp.asarray(slots, jnp.int32)
         out = []
         for pool, (kind, n) in zip(self.pools, self.cfg.segments()):

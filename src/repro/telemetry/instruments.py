@@ -235,7 +235,9 @@ class ClusterTelemetry:
                       "preemptions", "prefix_hit_tokens",
                       "spec_accepted_tokens", "spec_drafted_tokens")
     _KV_EVENTS = ("cow_copies", "prefix_evictions", "partial_hit_tokens",
-                  "partial_head_copies")
+                  "partial_head_copies", "spilled_pages",
+                  "prefetched_pages", "host_evictions",
+                  "spilled_hit_tokens")
 
     def on_step(self, cluster, now: float, n_exec: int) -> None:
         """One sampling tick, driven per cluster step: refresh gauges
@@ -275,6 +277,8 @@ class ClusterTelemetry:
         self.c_routing.labels(outcome="best_effort").set_total(
             stats.best_effort)
         self.c_routing.labels(outcome="dropped").set_total(stats.dropped)
+        self.c_routing.labels(outcome="placed_chains").set_total(
+            getattr(stats, "placed_chains", 0))
         per_cls = self._per_class_cumulative()
         for cls, (fin, att) in per_cls.items():
             self.g_attain.labels(slo_class=cls).set(
@@ -294,6 +298,12 @@ class ClusterTelemetry:
             "n_exec": float(n_exec),
             "attained_total": float(stats.attained),
             "served_total": float(stats.served),
+            # host spill tier (0 when off; ServingFrontend stats lack
+            # the fields entirely, hence the getattr guards)
+            "spilled_pages_total": float(
+                getattr(stats, "spilled_pages", 0)),
+            "prefetched_pages_total": float(
+                getattr(stats, "prefetched_pages", 0)),
         }
         for cls, v in win.items():
             row[f"attain_win[{cls}]"] = v

@@ -505,3 +505,40 @@ def test_cluster_spec_decode_streams_match_ar():
     for rid in prompts:
         assert len(spec_got[rid]) == 8, (rid, spec_got[rid])
         assert spec_got[rid] == ar_got[rid], rid
+
+
+def test_drain_spills_published_chains_to_survivor_host_tier():
+    """ISSUE 10 regression: retiring a drained replica must DEMOTE its
+    published prefix chains into a surviving replica's host tier, not
+    drop them — a drain removes capacity, not the prefix working set.
+    Post-drain probes on the survivor hit via the host tier and a
+    re-sent prompt is served there with prefetched pages."""
+    cl = make_cluster(n=2, host_spill_pages=16)
+    rng = np.random.default_rng(17)
+    family = rng.integers(1, CFG.vocab, 24).tolist()
+
+    req = simple_request(1, 0.0, prompt=24, output=4,
+                         ttft_slowdown=8.0, tpot=0.15)
+    cl.submit(req, prompt=list(family))
+    cl.run_until_idle()
+    assert cl.drivers[0].stats.served == 1
+    assert cl.drivers[0].engine.kv.cached        # published working set
+    survivor = cl.drivers[1].engine.kv
+    assert survivor.probe_prefix(list(family)) == 0   # cold before drain
+
+    cl.drain_replica(0)
+    cl.step()                                    # idle victim retires here
+    assert len(cl.drivers) == 1
+    assert survivor.host_index                   # chains demoted, not lost
+    assert survivor.probe_prefix(list(family)) >= 20
+
+    # the working set survives end-to-end: the re-sent prompt hits on the
+    # survivor via H2D prefetch, with budget conservation intact
+    req2 = simple_request(2, cl.clock, prompt=24, output=4,
+                          ttft_slowdown=8.0, tpot=0.15)
+    cl.submit(req2, prompt=list(family))
+    stats = cl.run_until_idle()
+    assert stats.served == 2 and stats.dropped == 0
+    assert survivor.prefetched_pages > 0
+    assert stats.spilled_hit_tokens > 0
+    assert cl.budget.used == 0

@@ -1,0 +1,315 @@
+"""Hierarchical KV: host-memory spill tier + proactive placement (ISSUE 10).
+
+Five coverage legs, mirroring the tentpole contract in
+docs/ARCHITECTURE.md "Hierarchical KV":
+
+  * forced-eviction spill -> prefetch round-trip at the manager layer,
+    with the re-delivered device pages verified bit-exact against
+    snapshots of the original published pages,
+  * the bit-identity matrix: the six paper scenario mixes replayed twice
+    (second pass re-hits the first pass's working set) produce identical
+    greedy streams on a large pool, an undersized pool with the spill
+    tier OFF, and an undersized pool with the spill tier ON — while the
+    spill-on engine demonstrably exercised spill AND prefetch,
+  * prefetch-overlap ordering: an admit on a spilled chain queues the
+    H2D copies but does NOT execute them; the single jitted flush runs
+    inside the same ``execute()`` call as the residual prefill,
+  * the DP admission flip: a spilled hit keeps its token discount but is
+    charged ``prefetch_seconds`` against the TTFT deadline, flipping a
+    tight-TTFT admit back to a decline,
+  * cluster-level proactive placement: a hot chain served on replica 0
+    appears in replica 1's host tier after the placement pass, prefix
+    affinity then routes the next request there, and the spill counters
+    surface in ``ClusterStats.as_dict()`` and the Prometheus text.
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.batch import Batch
+from repro.core.request import RequestState, simple_request
+from repro.core.router import RoutingPolicy, make_real_cluster
+from repro.core.scheduler import (SchedulerConfig, SLOsServeScheduler)
+from repro.core.perf_model import cpu_scale_perf_model
+from repro.core.slo import StageKind
+from repro.models import init_params
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.kvcache import PagedKVManager
+
+from test_prefix_token_level import SCENARIOS, _run_program, toks
+
+KEY = jax.random.PRNGKey(0)
+PAGE = 4
+CFG = get_reduced("smollm-135m")
+PARAMS = init_params(KEY, CFG)
+VIRT = cpu_scale_perf_model()
+
+
+def make_engine(**over):
+    defaults = dict(max_slots=6, max_len=128, page_size=PAGE,
+                    total_pages=128, share_prefix=True)
+    defaults.update(over)
+    return ServingEngine(CFG, PARAMS, EngineConfig(**defaults))
+
+
+def make_kv(**over):
+    kw = dict(total_pages=8, page_size=PAGE, max_seqs=4, max_len=64,
+              share_prefix=True, host_spill_pages=16)
+    kw.update(over)
+    return PagedKVManager(CFG, **kw)
+
+
+def _pages_equal(a, b) -> bool:
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(x, y) for x, y in zip(la, lb))
+
+
+# ------------------- spill -> prefetch round-trip ------------------------ #
+def test_forced_eviction_spills_then_prefetch_restores_content():
+    """LRU pressure retags the published chain into the host tier instead
+    of erasing it; a later admit on the same prompt prefetches fresh
+    device pages whose contents are bit-exact copies of the originals."""
+    base = list(range(100, 120))                       # 5 full shared pages
+    tokens = base + [777]                              # unique tail: probe
+    kv = make_kv()                                     # cap never bites
+    assert kv.admit(1, len(tokens), tokens=tokens)
+    kv.seq_len[kv.seq_of[1]] = len(tokens)
+    kv.register_prefix(1, tokens)
+    chain = list(kv.tables[1][:5])
+    snaps = [kv._page_to_host(p) for p in chain]       # pre-eviction truth
+    kv.release(1)                                      # -> cached, zero-ref
+    assert len(kv.cached) == 5
+
+    # a fat admission drains the whole pool: every cached page is evicted
+    # and every eviction spills (retag, not erase)
+    assert kv.admit(2, 8 * PAGE)
+    assert kv.spilled_pages == 5
+    assert kv.host_used == len(kv.host_index) == 5
+    assert not kv.prefix_index                         # never both tiers
+    kv.release(2)
+
+    # the chain is still matchable: probe via the host tier, admit
+    # prefetches, flush lands the copies in ONE jitted scatter.  The
+    # probe prompt diverges after the chain, so the hit is the full 5
+    # pages, uncapped.
+    fresh = base + [888]
+    hit = kv.probe_prefix(fresh)
+    assert hit == 5 * PAGE
+    assert kv.admit(3, len(fresh), tokens=fresh)
+    assert kv.length(3) == hit                         # probe == delivered
+    assert kv.prefetched_pages == 5
+    assert kv.flush_prefetch() == 5
+    assert kv.prefetch_flushes == 1
+    for i, p in enumerate(kv.tables[3][:5]):
+        assert _pages_equal(kv._page_to_host(p), snaps[i]), i
+    # prefetched entries moved host -> device: budget conservation holds
+    assert kv.host_used == len(kv.host_index) == 0
+    assert all(h not in kv.host_index for h in kv.page_key.values())
+
+
+def test_probe_matches_delivery_under_starved_budget():
+    """An honest probe: when the free pool cannot host the prefetched
+    pages the probe truncates exactly where ``_share_pages`` will."""
+    tokens = list(range(200, 220))
+    kv = make_kv()
+    assert kv.admit(1, len(tokens), tokens=tokens)
+    kv.seq_len[kv.seq_of[1]] = len(tokens)
+    kv.register_prefix(1, tokens)
+    kv.release(1)
+    assert kv.admit(2, 8 * PAGE)                       # spill all 5
+    kv.release(2)
+    # pin most of the pool so only 2 pages are grabbable for prefetch
+    assert kv.admit(9, 6 * PAGE)
+    hit = kv.probe_prefix(tokens)
+    assert hit == 2 * PAGE
+    assert kv.admit(3, hit, tokens=tokens)
+    assert kv.length(3) == hit
+    assert kv.prefetched_pages == 2
+
+
+# ----------------------- bit-identity matrix ----------------------------- #
+def test_scenario_matrix_bit_identical_spill_on_off():
+    """Two passes over the six paper scenarios (the second pass re-sends
+    every prompt, hitting whatever survived the first): greedy streams
+    are bit-identical on a roomy pool, an undersized pool spill-off, and
+    an undersized pool spill-on — and the spill-on engine actually
+    spilled AND prefetched along the way."""
+    variants = {"big": dict(total_pages=128, host_spill_pages=0),
+                "small-off": dict(total_pages=36, host_spill_pages=0),
+                "small-on": dict(total_pages=36, host_spill_pages=64)}
+    results = {}
+    for name, over in variants.items():
+        eng = make_engine(**over)
+        streams = {}
+        for pazz in (0, 1):
+            for si, (scen, build) in enumerate(sorted(SCENARIOS.items())):
+                streams[(pazz, scen)] = _run_program(
+                    eng, si + 6 * pazz, build(si))
+        results[name] = (streams, eng.kv.spilled_pages,
+                         eng.kv.prefetched_pages, eng.kv.prefetch_flushes)
+    ref = results["big"][0]
+    for name in ("small-off", "small-on"):
+        got = results[name][0]
+        for key, stream in ref.items():
+            a = {r % 10: v for r, v in stream.items()}
+            b = {r % 10: v for r, v in got[key].items()}
+            assert a == b, (name, key)
+    _, spilled, prefetched, flushes = results["small-on"]
+    assert spilled > 0 and prefetched > 0 and flushes > 0
+    assert results["small-off"][1] == 0                # tier really off
+
+
+# --------------------- prefetch-overlap ordering ------------------------- #
+def test_prefetch_deferred_from_admit_and_flushed_inside_execute():
+    """The H2D copy is queued at admit time and executed as one jitted
+    scatter at the top of the SAME ``execute()`` that runs the residual
+    prefill — the residual is grouped while the copy is in flight (JAX
+    async dispatch) and the functional pool update orders any later read
+    after the landed content.  Streams stay greedy-identical."""
+    prompt = toks(30, *range(16))
+    eng = make_engine(total_pages=12, host_spill_pages=32)
+
+    def serve(rid, p, decode=4):
+        assert eng.add_request(rid, p, expected_total=len(p) + 8)
+        out = []
+        residual = len(eng.reqs[rid].pending)
+        if residual:
+            b = Batch()
+            b.add(rid, StageKind.PREFILL, residual)
+            out += eng.execute(b).get(rid, [])
+        for _ in range(decode):
+            b = Batch()
+            b.add(rid, StageKind.DECODE, 1)
+            out += eng.execute(b).get(rid, [])
+        eng.finish(rid)
+        return out
+
+    first = serve(1, prompt)
+    filler = toks(31, *range(32))
+    serve(2, filler, decode=0)                 # 12-page pool: forced spill
+    assert eng.kv.spilled_pages >= 2           # LRU spills the chain root
+    assert eng.kv.prefetch_flushes == 0
+
+    assert eng.add_request(3, prompt, expected_total=len(prompt) + 8)
+    queued = len(eng.kv._pending_prefetch)
+    assert queued > 0                          # admit queued, didn't copy
+    assert eng.kv.prefetch_flushes == 0
+    b = Batch()
+    b.add(3, StageKind.PREFILL, len(eng.reqs[3].pending))
+    out = eng.execute(b).get(3, [])
+    assert eng.kv.prefetch_flushes == 1        # one scatter, inside execute
+    assert not eng.kv._pending_prefetch
+    for _ in range(4):
+        b = Batch()
+        b.add(3, StageKind.DECODE, 1)
+        out += eng.execute(b).get(3, [])
+    eng.finish(3)
+    assert out == first                        # bit-identical greedy stream
+
+
+# ----------------------- DP admission honesty ---------------------------- #
+def test_spilled_hit_admission_flips_on_prefetch_penalty():
+    """A spilled hit keeps the cached-prefix token discount, but the
+    planner charges the modeled H2D latency against the first prefill
+    deadline — at a tight TTFT the same discount admits when resident
+    and declines when it must be prefetched across a slow link."""
+    sched = SLOsServeScheduler(VIRT, SchedulerConfig(
+        page_size=4, prefill_emits_first_token=True))
+
+    def running_decode(rid):
+        r = simple_request(rid, 0.0, prompt=8, output=50,
+                           ttft_slowdown=8.0, tpot=0.05)
+        r.state = RequestState.RUNNING
+        r.stage_idx = 1
+        r.tokens_done = 1
+        r.token_times = [0.0]
+        r.stage_complete_times = [0.0]
+        return r
+
+    def probe(cached_prefix, penalty):
+        running = [running_decode(100 + i) for i in range(3)]
+        req = simple_request(1, 0.0, prompt=40, output=4,
+                             ttft_slowdown=1.05, tpot=0.15)
+        res = sched.plan(0.0, running, [req], mem_free=100,
+                         admission_only=True, cached_prefix=cached_prefix,
+                         prefetch_penalty=penalty)
+        return [r.rid for r in res.admitted]
+
+    assert probe(None, None) == []             # full prefill: late
+    assert probe({1: 24}, None) == [1]         # resident hit: in time
+    assert probe({1: 24}, {1: 0.0}) == [1]     # zero-cost prefetch: same
+    assert probe({1: 24}, {1: 5.0}) == []      # slow H2D eats the deadline
+
+    # the modeled latency scales with pages and inverse bandwidth
+    kv = make_kv(h2d_gbps=1.0)
+    slow = kv.prefetch_seconds(6)
+    kv2 = make_kv(h2d_gbps=64.0)
+    assert slow > kv2.prefetch_seconds(6) > kv2.prefetch_seconds(0) == 0.0
+
+
+# --------------------- proactive cross-replica placement ----------------- #
+def make_cluster(n=2, **kw):
+    defaults = dict(
+        policy=RoutingPolicy(max_hops=1, placement_interval=1,
+                             placement_min_hits=1),
+        total_pages=64, replica_pages=32, page_size=4,
+        max_slots=8, max_len=64, host_spill_pages=16,
+        sched_cfg=SchedulerConfig(page_size=4,
+                                  prefill_emits_first_token=True))
+    defaults.update(kw)
+    return make_real_cluster(n, CFG, PARAMS, VIRT, **defaults)
+
+
+def test_placement_pass_replicates_hot_chain_and_routing_prefers_it():
+    """Serving one prompt family on replica 0 makes its chain hot; the
+    placement pass installs it into replica 1's HOST tier (no device
+    pages spent), after which prefix affinity's free-pages tie-break
+    routes the next request to the freshly warmed, emptier replica."""
+    cl = make_cluster(n=2, telemetry=True)
+    rng = np.random.default_rng(11)
+    family = rng.integers(1, CFG.vocab, 24).tolist()
+
+    def submit(rid, t):
+        cl.submit(simple_request(rid, t, prompt=24, output=4,
+                                 ttft_slowdown=8.0, tpot=0.15),
+                  prompt=list(family))
+
+    submit(1, 0.0)
+    cl.run_until_idle()
+    assert cl.drivers[0].stats.served == 1
+    submit(2, cl.clock)                    # affinity pins replica 0; its
+    cl.run_until_idle()                    # probes heat up chain_hits
+    assert cl.drivers[0].stats.served == 2
+
+    stats = cl.stats
+    assert stats.placed_chains >= 1
+    kv1 = cl.drivers[1].engine.kv
+    assert kv1.host_index                  # hot chain placed, host tier
+    assert not kv1.prefix_index            # ...and no device pages spent
+    assert kv1.probe_prefix(list(family)) >= 20
+
+    # load replica 0 (pin half its pool) and re-send the hot prompt:
+    # both replicas hit equally, so affinity's free-pages tie-break
+    # moves the request to the freshly warmed, emptier replica 1
+    kv0 = cl.drivers[0].engine.kv
+    assert kv0.admit(999, 16 * 4)
+    submit(3, cl.clock)
+    cl.run_until_idle()
+    assert cl.drivers[1].stats.served == 1
+    assert cl.drivers[1].engine.kv.prefetched_pages > 0
+    assert cl.stats.affinity_routed >= 2
+    kv0.release(999)
+    assert cl.budget.used == 0
+
+    # counters surfaced upstream: as_dict + Prometheus exposition
+    d = cl.stats.as_dict()
+    for k in ("prefix_evictions", "spilled_pages", "prefetched_pages",
+              "host_evictions", "spilled_hit_tokens", "placed_chains"):
+        assert k in d, k
+    text = cl.telemetry.prometheus()
+    assert "repro_engine_events_total" in text
+    for ev in ("spilled_pages", "prefetched_pages", "prefix_evictions",
+               "host_evictions", "spilled_hit_tokens"):
+        assert 'event="%s"' % ev in text, ev
+    assert 'outcome="placed_chains"' in text

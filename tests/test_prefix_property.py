@@ -36,7 +36,8 @@ import numpy as np
 import pytest
 
 from repro.configs import get_reduced
-from repro.serving.kvcache import PagedKVManager, SharedPageBudget
+from repro.serving.kvcache import (PagedKVManager, SharedPageBudget,
+                                   _HostEntry)
 
 try:
     from hypothesis import settings, strategies as st
@@ -53,6 +54,7 @@ PAGES_PER_MGR = 10
 BUDGET = 16          # < 2 * PAGES_PER_MGR: budget truncation is reachable
 MAX_LEN = 16
 VOCAB = 6            # tiny alphabet: shared chunks + dedup occur often
+HOST_PAGES = 6       # < PAGES_PER_MGR: host-tier LRU eviction is reachable
 
 
 def check_lifecycle(kv: PagedKVManager) -> None:
@@ -93,23 +95,39 @@ def check_lifecycle(kv: PagedKVManager) -> None:
             continue
         want = pages[:kv.max_pages_per_seq]
         assert bt[kv.seq_of[rid]][:len(want)].tolist() == want, rid
+    # ---- host spill tier (ISSUE 10) ----
+    # credit-once host accounting mirrors SharedPageBudget: one credit
+    # per resident entry, never exceeding the tier's own budget
+    assert kv.host_used == len(kv.host_index) <= max(kv.host_spill_pages, 0)
+    if kv.host_spill_pages <= 0:
+        assert not kv.host_index and not kv._pending_prefetch
+    for h, e in kv.host_index.items():
+        # a chain entry lives in the device index OR the host tier, never
+        # both, and the tier holds only full verified pages
+        assert h not in kv.prefix_index, h
+        assert len(e.chunk) == kv.page_size
+    # queued H2D copies target pages that are already republished on the
+    # device (never a host-resident or free page)
+    for p, _ in kv._pending_prefetch:
+        assert p in kv.page_key and p not in kv.free
 
 
 class LifecycleHarness:
     """Executable model of the shared-page lifecycle: every op mirrors the
     engine's calling contract, every ``check`` asserts the invariants."""
 
-    def __init__(self, roots: list[list[int]]):
+    def __init__(self, roots: list[list[int]], host_pages: int = 0):
         self.budget = SharedPageBudget(BUDGET)
         self.mgrs = [
             PagedKVManager(CFG, total_pages=PAGES_PER_MGR, page_size=PAGE,
                            max_seqs=3, max_len=MAX_LEN, budget=self.budget,
-                           share_prefix=True)
+                           share_prefix=True, host_spill_pages=host_pages)
             for _ in range(2)]
         self.roots = roots
         self.tokens: dict[tuple[int, int], list] = {}   # (mgr, rid) live
         self.preempted: set[tuple[int, int]] = set()
         self.next_rid = 0
+        self._synth = 0      # synthetic host keys for op_evict_host
 
     def prompt(self, root_i: int, cut: int, suffix: list[int]) -> list[int]:
         root = self.roots[root_i % len(self.roots)]
@@ -188,28 +206,71 @@ class LifecycleHarness:
         for p in pages:
             kv._unref(p)
 
+    def op_spill(self, mgr, n_pages):
+        """Eviction pressure with the spill contract asserted: every
+        cached page the grab LRU-evicts must be retagged into the host
+        tier (a device eviction is a demotion, not a drop)."""
+        kv = self.mgrs[mgr]
+        free_before, cached_before = len(kv.free), len(kv.cached)
+        spilled_before = kv.spilled_pages
+        pages = kv._grab_pages(n_pages)
+        if pages is None:
+            return
+        evicted = max(0, min(n_pages - free_before, cached_before))
+        if kv.host_spill_pages > 0:
+            assert kv.spilled_pages - spilled_before == evicted
+        for p in pages:
+            kv._unref(p)
+
+    def op_prefetch(self, mgr):
+        """Drain the deferred H2D queue the way ``engine.execute`` does:
+        one flush lands every queued copy and empties the queue."""
+        kv = self.mgrs[mgr]
+        queued = len(kv._pending_prefetch)
+        assert kv.flush_prefetch() == queued
+        assert not kv._pending_prefetch
+
+    def op_evict_host(self, mgr, n_entries):
+        """Overflow the host tier with synthetic full-page entries so its
+        own LRU evicts (finally) — host budget stays credit-once."""
+        kv = self.mgrs[mgr]
+        if kv.host_spill_pages <= 0:
+            return
+        evictions_before = kv.host_evictions
+        overflow = max(0, kv.host_used + n_entries - kv.host_spill_pages)
+        for _ in range(n_entries):
+            self._synth += 1
+            key = ("synthetic", self._synth)    # never a computed chain hash
+            kv._host_insert(key, _HostEntry(None, tuple([1] * PAGE),
+                                            kv._page_to_host(0)))
+        assert kv.host_used == len(kv.host_index) <= kv.host_spill_pages
+        assert kv.host_evictions - evictions_before == overflow
+
     # ----------------------------- invariants ---------------------------- #
     def check(self):
         for kv in self.mgrs:
             check_lifecycle(kv)
         # credit-once: the shared budget equals the managers' live usage
+        # (host-tier residency consumes NO device budget)
         assert self.budget.used == sum(kv.used_pages for kv in self.mgrs)
         assert 0 <= self.budget.used <= self.budget.total_pages
 
 
 # --------------------------- seeded-fuzz driver -------------------------- #
-def _fuzz_sequence(seed: int, n_ops: int) -> list:
+def _fuzz_sequence(seed: int, n_ops: int, host_pages: int = 0) -> list:
     """One random op interleaving; returns the op log (the counterexample
     to paste into a regression test on failure)."""
     rng = np.random.default_rng(seed)
     roots = [rng.integers(1, VOCAB + 1, int(rng.integers(4, MAX_LEN - 1)))
              .tolist() for _ in range(int(rng.integers(2, 4)))]
-    h = LifecycleHarness(roots)
-    log = [("roots", roots)]
+    h = LifecycleHarness(roots, host_pages=host_pages)
+    log = [("roots", roots, host_pages)]
     for _ in range(n_ops):
         live = sorted(set(h.tokens))
         active = sorted(set(h.tokens) - h.preempted)
         ops = ["admit", "evict"]
+        if host_pages:
+            ops += ["spill", "prefetch", "evict_host"]
         if active:
             ops += ["publish", "publish", "preempt"]
         if h.preempted:
@@ -234,6 +295,14 @@ def _fuzz_sequence(seed: int, n_ops: int) -> list:
                         int(rng.integers(0, 5)))
         elif op == "release":
             h.op_release(live[int(rng.integers(len(live)))])
+        elif op == "spill":
+            h.op_spill(int(rng.integers(0, 2)),
+                       int(rng.integers(1, PAGES_PER_MGR + 1)))
+        elif op == "prefetch":
+            h.op_prefetch(int(rng.integers(0, 2)))
+        elif op == "evict_host":
+            h.op_evict_host(int(rng.integers(0, 2)),
+                            int(rng.integers(1, HOST_PAGES + 3)))
         else:
             h.op_evict(int(rng.integers(0, 2)),
                        int(rng.integers(1, PAGES_PER_MGR + 1)))
@@ -249,6 +318,14 @@ def test_shared_page_lifecycle_fuzz_quick():
         _fuzz_sequence(seed, 25)
 
 
+def test_spill_lifecycle_fuzz_quick():
+    """Tier-1 leg with the host spill tier on: the same interleavings
+    plus spill / prefetch / host-eviction churn under a host budget small
+    enough that host-LRU eviction actually fires."""
+    for seed in range(25):
+        _fuzz_sequence(seed, 25, host_pages=HOST_PAGES)
+
+
 @pytest.mark.slow
 def test_shared_page_lifecycle_fuzz_thorough():
     """Scheduled-job leg: 500+ generated op sequences (ISSUE 5
@@ -256,6 +333,14 @@ def test_shared_page_lifecycle_fuzz_thorough():
     n = max(int(os.environ.get("REPRO_PROPERTY_EXAMPLES", "0")), 500)
     for seed in range(n):
         _fuzz_sequence(seed, 40)
+
+
+@pytest.mark.slow
+def test_spill_lifecycle_fuzz_thorough():
+    """Scheduled-job leg, spill tier on (ISSUE 10 acceptance)."""
+    n = max(int(os.environ.get("REPRO_PROPERTY_EXAMPLES", "0")), 500)
+    for seed in range(n):
+        _fuzz_sequence(seed, 40, host_pages=HOST_PAGES)
 
 
 # ------------------------ hypothesis stateful wrapper -------------------- #
@@ -266,11 +351,13 @@ if HAVE_HYPOTHESIS:
         """Thin wrapper over LifecycleHarness: hypothesis picks the op
         interleaving and shrinks failures to a minimal op sequence."""
 
+        HOST = 0             # overridden by the spill-tier machine below
+
         @initialize(roots=st.lists(
             st.lists(ALPHA, min_size=4, max_size=MAX_LEN - 2),
             min_size=2, max_size=3))
         def setup(self, roots):
-            self.h = LifecycleHarness(roots)
+            self.h = LifecycleHarness(roots, host_pages=self.HOST)
 
         def _pick(self, data, pool, label):
             keys = sorted(pool)
@@ -314,21 +401,47 @@ if HAVE_HYPOTHESIS:
         def evict(self, mgr, n_pages):
             self.h.op_evict(mgr, n_pages)
 
+        @rule(mgr=st.integers(0, 1), n_pages=st.integers(1, PAGES_PER_MGR))
+        def spill(self, mgr, n_pages):
+            self.h.op_spill(mgr, n_pages)
+
+        @rule(mgr=st.integers(0, 1))
+        def prefetch(self, mgr):
+            self.h.op_prefetch(mgr)
+
+        @rule(mgr=st.integers(0, 1), n=st.integers(1, HOST_PAGES + 2))
+        def evict_host(self, mgr, n):
+            self.h.op_evict_host(mgr, n)
+
         @invariant()
         def lifecycle_invariants(self):
             if hasattr(self, "h"):
                 self.h.check()
 
-    def _run_machine(max_examples: int, steps: int) -> None:
+    class SpillPageLifecycle(SharedPageLifecycle):
+        """The same op machine with the host spill tier enabled: device
+        evictions demote to the host LRU and admits on spilled chains
+        queue deferred prefetches."""
+        HOST = HOST_PAGES
+
+    def _run_machine(machine, max_examples: int, steps: int) -> None:
         run_state_machine_as_test(
-            SharedPageLifecycle,
+            machine,
             settings=settings(max_examples=max_examples,
                               stateful_step_count=steps, deadline=None))
 
     def test_shared_page_lifecycle_hypothesis_quick():
-        _run_machine(40, 20)
+        _run_machine(SharedPageLifecycle, 40, 20)
+
+    def test_spill_lifecycle_hypothesis_quick():
+        _run_machine(SpillPageLifecycle, 40, 20)
 
     @pytest.mark.slow
     def test_shared_page_lifecycle_hypothesis_thorough():
         n = max(int(os.environ.get("REPRO_PROPERTY_EXAMPLES", "0")), 500)
-        _run_machine(n, 40)
+        _run_machine(SharedPageLifecycle, n, 40)
+
+    @pytest.mark.slow
+    def test_spill_lifecycle_hypothesis_thorough():
+        n = max(int(os.environ.get("REPRO_PROPERTY_EXAMPLES", "0")), 500)
+        _run_machine(SpillPageLifecycle, n, 40)
